@@ -1,0 +1,106 @@
+"""Shared benchmark harness: cached tiny 'model families' + eval metrics.
+
+The paper evaluates pretrained LLM families on WikiText PPL + zero-shot
+accuracy.  At container scale we train tiny instances of three families on
+the synthetic corpus (cached under results/bench_models) and report:
+  ppl  - held-out perplexity (the paper's PPL columns)
+  acc  - next-token top-1 accuracy (zero-shot-accuracy stand-in)
+  ind  - accuracy on copy-rule positions (induction; 'reasoning' stand-in)
+"""
+from __future__ import annotations
+
+import pathlib
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.optim import optimizers as opt
+from repro.optim.losses import lm_loss
+
+CACHE = pathlib.Path(__file__).resolve().parent.parent / "results" / \
+    "bench_models"
+
+FAMILIES: dict[str, ModelConfig] = {
+    "llama-tiny": ModelConfig(
+        name="llama-tiny", family="dense", d_model=128, num_layers=4,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512),
+    "gemma-tiny": ModelConfig(
+        name="gemma-tiny", family="dense", d_model=128, num_layers=4,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384, vocab_size=512,
+        pattern=("local", "attn"), sliding_window=16, attn_softcap=50.0,
+        final_softcap=30.0, sandwich_norm=True, scale_embed=True,
+        act="gelu"),
+    "moe-tiny": ModelConfig(
+        name="moe-tiny", family="moe", d_model=128, num_layers=4,
+        num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256, moe_d_ff=256,
+        vocab_size=512, pattern=("moe",), num_experts=4, top_k=2),
+}
+
+
+def get_trained(name: str, *, steps: int = 300, lr: float = 1.5e-3):
+    cfg = FAMILIES[name]
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{name}.pkl"
+    if f.exists():
+        params = jax.tree.map(jnp.asarray, pickle.load(open(f, "rb")))
+        return cfg, params
+    params = M.init_params(cfg, jax.random.key(0))
+    train = batches_for(cfg, n=50, batch=16, seq=128, split="train")
+    ocfg = opt.AdamWConfig(lr=lr, warmup_steps=steps // 10,
+                           total_steps=steps)
+    ostate = opt.adamw_init(params)
+
+    @jax.jit
+    def step(params, ostate, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda p, b: lm_loss(cfg, p, b), has_aux=True)(params, batch)
+        params, ostate, _ = opt.adamw_update(ocfg, g, ostate, params)
+        return params, ostate, l
+
+    for i in range(steps):
+        params, ostate, loss = step(params, ostate, train[i % len(train)])
+    pickle.dump(jax.tree.map(np.asarray, params), open(f, "wb"))
+    return cfg, params
+
+
+def evaluate(cfg: ModelConfig, params, *, n_batches: int = 3) -> dict:
+    valid = batches_for(cfg, n=n_batches, batch=12, seq=128, split="valid")
+    from repro.data.synthetic import _succ_params
+    a, b = _succ_params(cfg.vocab_size, 0)
+    tot_nll = tot = 0.0
+    hit = cnt = ind_hit = ind_cnt = 0
+
+    @jax.jit
+    def fwd(p, batch):
+        logits, _, _ = M.forward(cfg, p, batch)
+        return logits
+
+    for bt in valid:
+        batch = {k: jnp.asarray(v) for k, v in bt.items()}
+        logits = fwd(params, batch)
+        toks = np.asarray(batch["tokens"])
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -np.asarray(jnp.take_along_axis(
+            lp, jnp.asarray(toks[:, 1:])[..., None], axis=-1))[..., 0]
+        tot_nll += nll.sum()
+        tot += nll.size
+        pred = np.asarray(jnp.argmax(logits[:, :-1], -1))
+        tgt = toks[:, 1:]
+        hit += (pred == tgt).sum()
+        cnt += tgt.size
+        is_ind = tgt == (a * toks[:, :-1] + b) % cfg.vocab_size
+        ind_hit += ((pred == tgt) & is_ind).sum()
+        ind_cnt += is_ind.sum()
+    import math
+    return {"ppl": math.exp(min(tot_nll / tot, 30.0)),
+            "acc": hit / cnt, "ind": ind_hit / max(ind_cnt, 1)}
+
+
+def fmt_row(cols, widths=None):
+    widths = widths or [14] * len(cols)
+    return "  ".join(str(c)[:w].ljust(w) for c, w in zip(cols, widths))

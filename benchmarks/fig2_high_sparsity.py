@@ -1,0 +1,34 @@
+"""Paper Fig. 2: robustness at 70% sparsity across methods/models."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAMILIES, evaluate, fmt_row, get_trained
+from repro.configs.base import PruneConfig
+from repro.core import calibrate, masks as masks_mod
+from repro.data.synthetic import batches_for
+
+SP = 0.7
+
+
+def run(out_rows: list) -> None:
+    print("\n=== Fig 2: 70% sparsity robustness ===")
+    print(fmt_row(["model", "method", "ppl"]))
+    for fam in FAMILIES:
+        cfg, params = get_trained(fam)
+        calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
+        stats = calibrate.collect_stats(cfg, params, calib[:3])
+        for m in ["magnitude", "wanda", "ria"]:
+            mask = calibrate.baseline_masks(m, params, stats, SP,
+                                            key=jax.random.key(5))
+            r = evaluate(cfg, masks_mod.apply_masks(params, mask))
+            print(fmt_row([fam, m, f"{r['ppl']:.2f}"]))
+            out_rows.append({"table": "fig2", "model": fam, "method": m,
+                             "ppl": r["ppl"]})
+        pcfg = PruneConfig(local_metric="stochria", steps=60)
+        pruned, _, _ = calibrate.unipruning_prune(cfg, pcfg, params, calib,
+                                                  sparsities=[SP])
+        r = evaluate(cfg, pruned[SP])
+        print(fmt_row([fam, "unipruning", f"{r['ppl']:.2f}"]))
+        out_rows.append({"table": "fig2", "model": fam,
+                         "method": "unipruning", "ppl": r["ppl"]})

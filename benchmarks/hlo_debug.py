@@ -1,0 +1,54 @@
+"""Per-computation attribution of the roofline terms: which while bodies /
+fusions account for the bytes, flops and collectives after trip-count
+multiplication.  Used by the EXPERIMENTS.md perf iterations to localize the
+dominant term.
+
+  PYTHONPATH=src python -m benchmarks.hlo_debug results/dryrun/<tag>.hlo.gz
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.launch.hlo_analysis import (_analyze_comp, _parse_computations,
+                                       analyze_file)
+
+
+def main(path: str, top: int = 14) -> None:
+    import gzip
+    op = gzip.open if path.endswith(".gz") else open
+    text = op(path, "rt").read()
+    raw, entry = _parse_computations(text)
+    comps = {name: _analyze_comp(lines) for name, lines in raw.items()}
+
+    rows = []
+
+    def visit(name, mult, parent_mult, in_fusion, depth=0):
+        st = comps.get(name)
+        if st is None or depth > 64:
+            return
+        if not in_fusion:
+            rows.append((mult * st.bytes_out + parent_mult * st.dus_bytes,
+                         mult * st.dot_flops,
+                         mult * st.coll_bytes, mult, name))
+        for kind, callee, cond in st.calls:
+            if kind == "while":
+                trip = comps[cond].trip_hint if cond in comps else 1
+                visit(callee, mult * trip, mult, in_fusion, depth + 1)
+            elif kind == "fusion":
+                visit(callee, mult, parent_mult, True, depth + 1)
+            else:
+                visit(callee, mult, parent_mult, in_fusion, depth + 1)
+
+    visit(entry, 1.0, 1.0, False)
+    rows.sort(reverse=True)
+    print(f"{'bytes':>12s} {'dotflops':>12s} {'coll':>12s} {'mult':>8s} name")
+    for b, f, c, m, n in rows[:top]:
+        print(f"{b:12.3e} {f:12.3e} {c:12.3e} {m:8.0f} {n[:70]}")
+    s = analyze_file(path)
+    print(f"\nTOTAL bytes {s.bytes_out:.3e} dotflops {s.dot_flops:.3e} "
+          f"coll {s.coll_bytes:.3e} whiles {s.n_while} "
+          f"trips {sorted(set(s.trip_counts))[:12]}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], int(sys.argv[2]) if len(sys.argv) > 2 else 14)

@@ -1,0 +1,151 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = HLO_dot_FLOPs / peak_FLOPs          (per device, s)
+  memory term     = 2 * HLO_bytes / HBM_bw              (write + read)
+  collective term = collective_bytes / link_bw
+with HLO quantities from the while-trip-aware analyzer
+(repro/launch/hlo_analysis.py; cost_analysis() counts scan bodies once and
+is unusable directly).  Also reports MODEL_FLOPS (6*N_active*D for train,
+2*N_active*tokens for serve) and the useful-compute ratio
+MODEL_FLOPS / (devices * HLO_FLOPs), which exposes remat/redundancy waste.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+      [--multi-pod] [--write results/roofline.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+PEAK_FLOPS = 197e12        # v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # ICI per link
+
+from repro.configs.base import ARCH_IDS, SHAPE_CELLS, get_config
+
+
+def _param_counts(arch: str) -> tuple[float, float]:
+    """(N_total, N_active) from the real config's param shapes."""
+    from repro.models import model as M
+    cfg = get_config(arch)
+    shapes = M.param_shapes(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = active = 0.0
+    for kp, s in flat:
+        n = 1
+        for d in s.shape:
+            n *= d
+        path = jax.tree_util.keystr(kp)
+        total += n
+        if "['moe']" in path and len(s.shape) == 4 and "shared" not in path:
+            # stacked expert kernels (L, E, d, f): only top_k/E active
+            active += n * cfg.top_k / max(cfg.num_experts, 1)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(arch: str, cell_name: str) -> float:
+    cell = SHAPE_CELLS[cell_name]
+    n_total, n_active = _param_counts(arch)
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch  # one decoded token
+
+
+def analyze_cell(dirpath: pathlib.Path, arch: str, cell: str,
+                 multi_pod: bool) -> dict | None:
+    tag = f"{arch}__{cell}__{'multipod' if multi_pod else 'pod'}"
+    jf = dirpath / f"{tag}.json"
+    if not jf.exists():
+        return None
+    rec = json.loads(jf.read_text())
+    if rec.get("skipped"):
+        return {"arch": arch, "cell": cell, "skipped": rec["skipped"]}
+    if rec.get("error"):
+        return {"arch": arch, "cell": cell, "error": rec["error"]}
+    from repro.launch.hlo_analysis import analyze_file
+    s = analyze_file(dirpath / f"{tag}.hlo.gz")
+    n_dev = rec["devices"]
+    t_c = s.dot_flops / PEAK_FLOPS
+    t_m = 2.0 * s.bytes_out / HBM_BW
+    t_x = s.coll_bytes / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops(arch, cell)
+    ratio = mf / max(n_dev * s.dot_flops, 1e-30)
+    return {
+        "arch": arch, "cell": cell, "devices": n_dev,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom[1],
+        "hlo_flops_per_dev": s.dot_flops,
+        "hlo_bytes_per_dev": s.bytes_out,
+        "coll_bytes_per_dev": s.coll_bytes,
+        "coll_by_op": s.coll_by_op,
+        "model_flops_global": mf,
+        "useful_ratio": ratio,
+        "hbm_per_dev_gb": rec.get("per_device_hbm_bytes", 0) / 1e9,
+        "fits_16gb": rec.get("fits_16gb"),
+        "compile_s": rec.get("compile_s"),
+        "roofline_fraction": t_c / max(t_c, t_m, t_x),
+        "note": _note(dom[1], ratio, s),
+    }
+
+
+def _note(dom: str, ratio: float, s) -> str:
+    if dom == "compute":
+        if ratio < 0.5:
+            return ("compute-bound but only {:.0%} useful - cut remat "
+                    "recompute or redundant (replicated) matmuls".format(ratio))
+        return "compute-bound; gains need better MXU shapes or less remat"
+    if dom == "memory":
+        return ("memory-bound; fuse elementwise chains / shrink saved "
+                "activations (bytes dominate flops)")
+    ag = s.coll_by_op.get("all-gather", 0)
+    ar = s.coll_by_op.get("all-reduce", 0)
+    which = "all-gather (FSDP weight gathers)" if ag >= ar else \
+        "all-reduce (grad sync)"
+    return f"collective-bound, dominated by {which}; overlap or re-shard"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--write", default="results/roofline.json")
+    args = ap.parse_args()
+    d = pathlib.Path(args.dir)
+    rows = []
+    for arch in ARCH_IDS:
+        for cell in SHAPE_CELLS:
+            r = analyze_cell(d, arch, cell, args.multi_pod)
+            if r is not None:
+                rows.append(r)
+    hdr = (f"{'arch':22s} {'cell':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>6s} {'useful':>7s} {'HBM GB':>7s}")
+    print(hdr)
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']:22s} {r['cell']:12s} SKIP ({r['skipped'][:48]})")
+            continue
+        if r.get("error"):
+            print(f"{r['arch']:22s} {r['cell']:12s} ERROR")
+            continue
+        print(f"{r['arch']:22s} {r['cell']:12s} "
+              f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+              f"{r['t_collective_s']:9.2e} {r['dominant'][:6]:>6s} "
+              f"{r['useful_ratio']:7.2f} {r['hbm_per_dev_gb']:7.2f}")
+    if args.write:
+        pathlib.Path(args.write).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(args.write).write_text(json.dumps(rows, indent=1))
+        print("wrote", args.write)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints each table and a final ``name,us_per_call,derived`` CSV summary;
+writes structured results to results/bench/results.json.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig2_high_sparsity, oneshot_export,
+                            table1_unstructured, table2_semistructured,
+                            table4_local_metric, table5_mirror_ablation,
+                            table8_inference)
+
+    rows: list[dict] = []
+    timings: list[tuple[str, float]] = []
+    for mod in [table1_unstructured, table2_semistructured,
+                table4_local_metric, table5_mirror_ablation,
+                fig2_high_sparsity, table8_inference, oneshot_export]:
+        name = mod.__name__.split(".")[-1]
+        t0 = time.time()
+        mod.run(rows)
+        timings.append((name, time.time() - t0))
+
+    out = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "results.json").write_text(json.dumps(rows, indent=1))
+
+    print("\nname,us_per_call,derived")
+    for name, dt in timings:
+        derived = ""
+        if name == "table8_inference":
+            e2e = [r for r in rows
+                   if r.get("module") == "end-to-end"]
+            derived = f"proj_speedup={e2e[0]['proj_speedup']:.2f}x" if e2e \
+                else ""
+        if name == "table1_unstructured":
+            uni = [r["ppl"] for r in rows
+                   if r.get("table") == 1 and r["method"] == "unipruning"]
+            derived = f"uni_mean_ppl={sum(uni)/len(uni):.2f}" if uni else ""
+        print(f"{name},{dt*1e6:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

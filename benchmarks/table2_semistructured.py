@@ -1,0 +1,42 @@
+"""Paper Table 2: 2:4 semi-structured pruning PPL across methods.
+
+Baselines take top-2-of-4 on their local metric; UniPruning adds the
+R_{2:4} prox on W during search (Algorithm 1 N:M branch) and exports the
+2:4 mask from Gamma."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import FAMILIES, evaluate, fmt_row, get_trained
+from repro.configs.base import PruneConfig
+from repro.core import calibrate, masks as masks_mod
+from repro.data.synthetic import batches_for
+
+METHODS = ["magnitude", "wanda", "ria"]
+
+
+def run(out_rows: list) -> None:
+    print("\n=== Table 2: 2:4 semi-structured PPL ===")
+    print(fmt_row(["model", "method", "ppl", "acc"]))
+    for fam in FAMILIES:
+        cfg, params = get_trained(fam)
+        dense = evaluate(cfg, params)
+        print(fmt_row([fam, "dense", f"{dense['ppl']:.2f}",
+                       f"{dense['acc']:.3f}"]))
+        calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
+        stats = calibrate.collect_stats(cfg, params, calib[:3])
+        for m in METHODS:
+            mask = calibrate.baseline_masks(m, params, stats, 0.5,
+                                            mode="nm",
+                                            key=jax.random.key(5))
+            r = evaluate(cfg, masks_mod.apply_masks(params, mask))
+            print(fmt_row([fam, m, f"{r['ppl']:.2f}", f"{r['acc']:.3f}"]))
+            out_rows.append({"table": 2, "model": fam, "method": m, **r})
+        pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=60)
+        pruned, state, _ = calibrate.unipruning_prune(
+            cfg, pcfg, params, calib, sparsities=[0.5])
+        r = evaluate(cfg, pruned[0.5])
+        print(fmt_row([fam, "unipruning", f"{r['ppl']:.2f}",
+                       f"{r['acc']:.3f}"]))
+        out_rows.append({"table": 2, "model": fam, "method": "unipruning",
+                         **r})

@@ -1,0 +1,26 @@
+"""Paper Table 4: UniPruning under different local metrics x sparsity."""
+from __future__ import annotations
+
+from benchmarks.common import evaluate, fmt_row, get_trained
+from repro.configs.base import PruneConfig
+from repro.core import calibrate
+from repro.data.synthetic import batches_for
+
+SPARSITIES = [0.5, 0.6, 0.7]
+METRICS = ["magnitude", "wanda", "ria", "stochria"]
+
+
+def run(out_rows: list) -> None:
+    print("\n=== Table 4: local-metric ablation (llama-tiny) ===")
+    print(fmt_row(["metric"] + [f"ppl@{int(s*100)}%" for s in SPARSITIES]))
+    cfg, params = get_trained("llama-tiny")
+    calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
+    for m in METRICS:
+        pcfg = PruneConfig(local_metric=m, steps=60)
+        pruned, _, _ = calibrate.unipruning_prune(
+            cfg, pcfg, params, calib, sparsities=SPARSITIES)
+        ppls = [evaluate(cfg, pruned[s])["ppl"] for s in SPARSITIES]
+        print(fmt_row([m] + [f"{p:.2f}" for p in ppls]))
+        out_rows.append({"table": 4, "metric": m,
+                         **{f"ppl{int(s*100)}": p
+                            for s, p in zip(SPARSITIES, ppls)}})

@@ -1,0 +1,56 @@
+"""Quickstart: prune a small LM with UniPruning in ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core import calibrate, masks as masks_mod
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.optim.losses import eval_ppl
+
+# 1. a model (normally: restored pretrained weights; here: 80 quick steps
+#    on the synthetic corpus so the pruned-quality numbers mean something)
+cfg = ModelConfig(name="demo", family="dense", d_model=128, num_layers=4,
+                  num_heads=4, num_kv_heads=2, head_dim=32, d_ff=384,
+                  vocab_size=512)
+params = M.init_params(cfg, jax.random.key(0))
+
+from repro.optim import optimizers as opt
+from repro.optim.losses import lm_loss
+
+_train = batches_for(cfg, n=20, batch=16, seq=128, split="train")
+_ocfg = opt.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=80)
+_ostate = opt.adamw_init(params)
+
+
+@jax.jit
+def _step(p, o, b):
+    (l, _), g = jax.value_and_grad(
+        lambda pp, bb: lm_loss(cfg, pp, bb), has_aux=True)(p, b)
+    p, o, _ = opt.adamw_update(_ocfg, g, o, p)
+    return p, o, l
+
+
+for i in range(80):
+    params, _ostate, _loss = _step(params, _ostate, _train[i % len(_train)])
+
+# 2. a calibration set (normally: 128 C4 samples)
+calib = batches_for(cfg, n=8, batch=8, seq=128, split="calib")
+
+# 3. UniPruning: stats -> mirror-descent search -> one-shot masks
+pcfg = PruneConfig(local_metric="stochria", steps=30)
+pruned, state, history = calibrate.unipruning_prune(
+    cfg, pcfg, params, calib, sparsities=[0.5, 0.7])
+
+valid = batches_for(cfg, n=2, batch=8, seq=128, split="valid")
+print(f"dense  PPL: {eval_ppl(cfg, params, valid):.2f}")
+for sp, p in pruned.items():
+    print(f"{int(sp*100)}%-sparse PPL: {eval_ppl(cfg, p, valid):.2f}")
+
+# 4. baselines share the same stats + mask machinery
+stats = calibrate.collect_stats(cfg, params, calib[:2])
+wanda = calibrate.baseline_masks("wanda", params, stats, 0.5)
+print(f"wanda 50% PPL: "
+      f"{eval_ppl(cfg, masks_mod.apply_masks(params, wanda), valid):.2f}")

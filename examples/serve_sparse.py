@@ -1,0 +1,14 @@
+"""Batched serving of a 2:4-pruned model (paper Table 8 scenario).
+
+  PYTHONPATH=src python examples/serve_sparse.py
+"""
+import subprocess
+import sys
+
+# The serve launcher is the real entry point; this example drives it with
+# a sparse model + batched requests.
+cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "llama3.2-1b",
+       "--smoke", "--batch", "4", "--prompt-len", "64", "--gen", "16",
+       "--sparse"]
+print("+", " ".join(cmd))
+raise SystemExit(subprocess.call(cmd))

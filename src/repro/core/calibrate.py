@@ -1,0 +1,84 @@
+"""End-to-end UniPruning calibration drivers.
+
+collect_stats   - one eager, unrolled pass over the calibration set with the
+                  stats tape (Algorithm 1, line 1).
+run_search      - N jitted mirror-descent steps (lines 3-12).
+unipruning_prune- full pipeline: stats -> search -> Gamma -> masks(W0) at any
+                  requested sparsity levels (one search, many budgets).
+baseline_masks  - one-shot local-metric baselines (Magnitude/Wanda/RIA/
+                  stochRIA) sharing the same stats and mask machinery.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core import masks as masks_mod
+from repro.core import metrics as metrics_mod
+from repro.core import mirror
+from repro.core import tape as tape_mod
+from repro.core.prunable import prunable_map
+from repro.optim.losses import lm_loss
+
+PyTree = Any
+
+
+def collect_stats(cfg: ModelConfig, params: PyTree,
+                  batches: Iterable[dict]) -> PyTree:
+    t = tape_mod.StatsTape()
+    with tape_mod.recording(t):
+        for b in batches:
+            lm_loss(cfg, params, b, unroll=True)
+    return tape_mod.resolve_stats(t, params)
+
+
+def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
+               batches: list[dict], stats: PyTree, *,
+               log_every: int = 0, loss_fn: Callable | None = None):
+    """Returns (final state, history)."""
+    prunable = prunable_map(params0)
+    loss_fn = loss_fn or partial(lm_loss, cfg)
+    state = mirror.init_search(params0, jax.random.key(17))
+    # prunable (static bools) and stats close over the jitted step
+    step_fn = jax.jit(lambda st, b: mirror.search_step(
+        pcfg, loss_fn, st, b, stats, prunable))
+    history = []
+    for n in range(pcfg.steps):
+        batch = batches[n % len(batches)]
+        state, m = step_fn(state, batch)
+        if log_every and n % log_every == 0:
+            history.append({k: float(v) for k, v in m.items()})
+    return state, history
+
+
+def unipruning_prune(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
+                     calib_batches: list[dict],
+                     sparsities: Iterable[float] = (0.5,),
+                     loss_fn: Callable | None = None):
+    """Full pipeline. Returns {sparsity: pruned_params}, Gamma, history."""
+    stats = collect_stats(cfg, params0, calib_batches[:4])
+    state, history = run_search(cfg, pcfg, params0, calib_batches, stats,
+                                log_every=10, loss_fn=loss_fn)
+    out = {}
+    for s in sparsities:
+        masks = mirror.export_masks(pcfg, state.Gamma, s, V=state.V)
+        out[s] = masks_mod.apply_masks(params0, masks)
+    return out, state, history
+
+
+def baseline_masks(method: str, params0: PyTree, stats: PyTree,
+                   sparsity: float, *, mode: str = "unstructured",
+                   scope: str = "row", nm: tuple[int, int] = (2, 4),
+                   key: jax.Array | None = None) -> PyTree:
+    """Local-metric one-shot baselines (no search stage)."""
+    prunable = prunable_map(params0)
+    S = metrics_mod.metric_tree(method, params0, stats, prunable, key=key)
+    if mode == "nm":
+        return masks_mod.nm_masks(S, *nm)
+    if method == "magnitude" and scope == "row":
+        scope = "layer"  # magnitude baseline is layer-wise in the paper
+    return masks_mod.unstructured_masks(S, sparsity, scope=scope)

@@ -1,0 +1,135 @@
+"""Mask export: one-shot extraction at arbitrary sparsity from saliency maps.
+
+* ``global_threshold``  - exact: one global sort/quantile of |Gamma|.
+* ``threshold_bisect``  - scalable: histogram bisection using only full
+  reductions (each round lowers to one tiny all-reduce under pjit), usable
+  across pods where a global sort is not.
+* ``unstructured_masks``- scope = global | layer | row.
+* ``nm_masks``          - N:M per-group top-N along the input (reduction) dim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flat_abs(tree: Any) -> jax.Array:
+    leaves = [jnp.abs(x.astype(jnp.float32)).reshape(-1)
+              for x in jax.tree.leaves(tree) if x is not None]
+    return jnp.concatenate(leaves)
+
+
+def global_threshold(score_tree: Any, sparsity: float) -> jax.Array:
+    """Exact tau: |score| < tau is pruned; keeps top (1-sparsity) fraction."""
+    flat = _flat_abs(score_tree)
+    return jnp.quantile(flat, sparsity)
+
+
+def threshold_bisect(score_tree: Any, sparsity: float, *, iters: int = 40,
+                     hi: float | None = None) -> jax.Array:
+    """Distributed-friendly tau via bisection on P(|s| <= tau).
+
+    Uses only sum-reductions over each (possibly sharded) leaf, so under pjit
+    every round is a scalar all-reduce; no gather/sort of Gamma ever happens.
+    """
+    leaves = [x for x in jax.tree.leaves(score_tree) if x is not None]
+    total = sum(x.size for x in leaves)
+    if hi is None:
+        hi = sum(jnp.max(jnp.abs(l.astype(jnp.float32))) for l in leaves)
+
+    def count_le(tau):
+        return sum(jnp.sum(jnp.abs(l.astype(jnp.float32)) <= tau)
+                   for l in leaves)
+
+    def body(i, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        frac = count_le(mid) / total
+        return jnp.where(frac < sparsity, mid, lo), \
+            jnp.where(frac < sparsity, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body,
+                               (jnp.zeros((), jnp.float32),
+                                jnp.asarray(hi, jnp.float32)))
+    return 0.5 * (lo + hi)
+
+
+def unstructured_masks(score_tree: Any, sparsity: float, *,
+                       scope: str = "global", exact: bool = True) -> Any:
+    """Binary keep-masks matching score_tree (None leaves stay None).
+
+    scope: 'global' (one budget, UniPruning), 'layer' (per-tensor budget),
+    'row'  (per-output-column budget along d_in - Wanda's comparison group).
+    """
+    is_none = lambda x: x is None
+
+    if scope == "global":
+        tau = (global_threshold(score_tree, sparsity) if exact
+               else threshold_bisect(score_tree, sparsity))
+        return jax.tree.map(
+            lambda s: None if s is None else jnp.abs(s) >= tau,
+            score_tree, is_leaf=is_none)
+
+    def layer_mask(s):
+        if s is None:
+            return None
+        tau = jnp.quantile(jnp.abs(s.astype(jnp.float32)), sparsity)
+        return jnp.abs(s) >= tau
+
+    def row_mask(s):
+        if s is None:
+            return None
+        a = jnp.abs(s.astype(jnp.float32))
+        # comparison group: all inputs feeding one output unit (axis -2)
+        k = max(1, int(round(s.shape[-2] * (1.0 - sparsity))))
+        kth = -jnp.sort(-a, axis=-2)[..., k - 1:k, :]
+        return a >= kth
+
+    fn = layer_mask if scope == "layer" else row_mask
+    return jax.tree.map(fn, score_tree, is_leaf=is_none)
+
+
+def nm_masks(score_tree: Any, n: int = 2, m: int = 4) -> Any:
+    """Keep top-n of every m contiguous entries along the input dim.
+
+    Rank-based with deterministic tie-break (earlier position wins) - a
+    late-arriving group maximum can never be dropped.
+    """
+    def leaf(s):
+        if s is None:
+            return None
+        *lead, d_in, d_out = s.shape
+        assert d_in % m == 0, (d_in, m)
+        g = jnp.abs(s.astype(jnp.float32)).reshape(*lead, d_in // m, m, d_out)
+        g = jnp.moveaxis(g, -2, -1)              # (*lead, d_in//m, d_out, m)
+        gi = g[..., :, None]
+        gj = g[..., None, :]
+        pos = jnp.arange(m)
+        j_earlier = pos[None, :] < pos[:, None]  # [i, j]: j < i
+        rank = jnp.sum((gj > gi) | ((gj == gi) & j_earlier), axis=-1)
+        mask = rank < n
+        return jnp.moveaxis(mask, -1, -2).reshape(*lead, d_in, d_out)
+
+    return jax.tree.map(leaf, score_tree, is_leaf=lambda x: x is None)
+
+
+def apply_masks(params: Any, masks: Any) -> Any:
+    """W0 ⊙ M with None masks passing weights through untouched."""
+    def leaf(w, m):
+        return w if m is None else w * m.astype(w.dtype)
+
+    return jax.tree.map(leaf, params, masks,
+                        is_leaf=lambda x: x is None)
+
+
+def sparsity_of(masks: Any) -> float:
+    tot = kept = 0
+    for m in jax.tree.leaves(masks):
+        if m is None:
+            continue
+        tot += m.size
+        kept += int(jnp.sum(m))
+    return 1.0 - kept / max(tot, 1)

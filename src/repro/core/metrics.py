@@ -1,0 +1,117 @@
+"""Local saliency metrics S(W, X).
+
+All metrics operate on a kernel W of shape (*lead, d_in, d_out) with optional
+activation stats a of shape (*lead, d_in) = per-input-feature RMS norm over
+the calibration set.  When a is None they gracefully degrade to their
+weight-only form (magnitude).
+
+  magnitude : |W|                                     (Zhu & Gupta 2017)
+  wanda     : |W| * a[..., None]                      (Sun et al. 2024)
+  ria       : (|W|/rowsum + |W|/colsum) * a^0.5       (Zhang et al. 2024)
+  stochria  : RIA with subsampled row/col sums        (Yi & Richtarik 2025)
+
+These are differentiable in W (abs subgradient), which the mirror-descent
+alignment term relies on.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("magnitude", "wanda", "ria", "stochria")
+
+
+def magnitude(w: jax.Array, a=None, *, key=None) -> jax.Array:
+    return jnp.abs(w.astype(jnp.float32))
+
+
+def wanda(w: jax.Array, a=None, *, key=None) -> jax.Array:
+    s = jnp.abs(w.astype(jnp.float32))
+    if a is not None:
+        s = s * a[..., None]
+    return s
+
+
+def _ria_core(w, a, row_w=None, col_w=None, eps=1e-12):
+    aw = jnp.abs(w.astype(jnp.float32))
+    # rowsum: over d_out for each input row; colsum: over d_in per output col
+    if row_w is None:
+        rowsum = jnp.sum(aw, axis=-1, keepdims=True)
+        colsum = jnp.sum(aw, axis=-2, keepdims=True)
+    else:
+        rowsum = jnp.sum(aw * row_w, axis=-1, keepdims=True) / \
+            jnp.mean(row_w)
+        colsum = jnp.sum(aw * col_w, axis=-2, keepdims=True) / \
+            jnp.mean(col_w)
+    s = aw / (rowsum + eps) + aw / (colsum + eps)
+    if a is not None:
+        s = s * jnp.sqrt(jnp.maximum(a, 1e-12))[..., None]
+    return s
+
+
+def ria(w: jax.Array, a=None, *, key=None) -> jax.Array:
+    return _ria_core(w, a)
+
+
+def stochria(w: jax.Array, a=None, *, key=None, frac: float = 0.9) -> jax.Array:
+    """RIA with Bernoulli-subsampled row/col sums (stochastic normalizers)."""
+    if key is None:
+        return _ria_core(w, a)
+    k1, k2 = jax.random.split(key)
+    row_w = jax.random.bernoulli(k1, frac, w.shape[-1:]).astype(jnp.float32)
+    col_w = jax.random.bernoulli(k2, frac, w.shape[-2:-1]).astype(jnp.float32)
+    return _ria_core(w, a, row_w=row_w, col_w=col_w[..., :, None])
+
+
+def get_metric(name: str, stoch_frac: float = 0.9):
+    if name == "magnitude":
+        return magnitude
+    if name == "wanda":
+        return wanda
+    if name == "ria":
+        return ria
+    if name == "stochria":
+        return partial(stochria, frac=stoch_frac)
+    raise ValueError(f"unknown metric {name!r}; options: {METRICS}")
+
+
+def normalize_scores(s: jax.Array, how: str) -> jax.Array:
+    """Per-tensor scale normalization: makes saliency cross-layer comparable
+    so ONE global budget can redistribute sparsity across layers (the
+    paper's 'global controller'; see DESIGN.md #8 and EXPERIMENTS.md)."""
+    if how == "none":
+        return s
+    # The normalizer is a per-tensor scale CONSTANT (not part of the
+    # saliency geometry): stop_gradient keeps the alignment gradient on the
+    # scores themselves and avoids differentiating through sort.
+    if how == "mean":
+        return s / (jax.lax.stop_gradient(jnp.mean(s)) + 1e-12)
+    if how == "median":
+        # jnp.median's quantile->gather lowering is broken in this jaxlib;
+        # sort + static middle index is equivalent for our (flat) use.
+        flat = jax.lax.stop_gradient(s.reshape(-1))
+        med = jnp.sort(flat)[flat.size // 2]
+        return s / (med + 1e-12)
+    raise ValueError(how)
+
+
+def metric_tree(name: str, params: Any, stats: Any, prunable: Any,
+                key: jax.Array | None = None, stoch_frac: float = 0.9,
+                norm: str = "none") -> Any:
+    """Apply the metric leafwise over prunable kernels; None elsewhere."""
+    fn = get_metric(name, stoch_frac)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flat_stats, _ = jax.tree_util.tree_flatten(
+        stats, is_leaf=lambda x: x is None)
+    flat_pr, _ = jax.tree_util.tree_flatten(prunable)
+    out = []
+    for i, (w, a, pr) in enumerate(zip(leaves, flat_stats, flat_pr)):
+        if not pr:
+            out.append(None)
+            continue
+        k = None if key is None else jax.random.fold_in(key, i)
+        out.append(normalize_scores(fn(w, a, key=k), norm))
+    return jax.tree_util.tree_unflatten(treedef, out)

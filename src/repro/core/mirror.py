@@ -1,0 +1,184 @@
+"""UniPruning mirror-descent search (paper Algorithm 1, Eqs. 5-7).
+
+State: a trainable copy W of the pretrained weights, the saliency variable
+Gamma and its dual V (both only on prunable leaves).  Per step:
+
+  S      = S(W^n, X)                        local metric at current W
+  g_task = grad_W L_task(W^n)
+  g_align= rho * grad_W 0.5||Gamma - S(W)||^2        (exact, via autodiff)
+  W     <- W - kappa*alpha*(g_task + g_align)
+  W     <- Prox_{R_{2:4}}(W)                          [N:M mode only]
+  V     <- V - alpha*rho*(Gamma - S)
+  Gamma <- soft_threshold(V, lam)                     Prox of lam*L1
+
+The pretrained W0 is never touched; masks are extracted from Gamma and
+applied to W0 (core/masks.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PruneConfig
+from repro.core import masks as masks_mod
+from repro.core import metrics as metrics_mod
+from repro.core import prox as prox_mod
+from repro.core.prunable import prunable_map
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SearchState:
+    W: PyTree          # trainable copy (full params tree)
+    Gamma: PyTree      # saliency variable (prunable leaves, else None)
+    V: PyTree          # dual variable (prunable leaves, else None)
+    step: jax.Array    # scalar int32
+    rng: jax.Array
+
+
+def _zeros_like_prunable(params: PyTree, prunable: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda w, p: jnp.zeros(w.shape, jnp.float32) if p else None,
+        params, prunable)
+
+
+def init_search(params0: PyTree, key: jax.Array) -> SearchState:
+    pr = prunable_map(params0)
+    return SearchState(
+        W=jax.tree.map(lambda x: x.astype(jnp.float32), params0),
+        Gamma=_zeros_like_prunable(params0, pr),
+        V=_zeros_like_prunable(params0, pr),
+        step=jnp.zeros((), jnp.int32),
+        rng=key)
+
+
+def _tree_sub(a, b, scale):
+    return jax.tree.map(lambda x, y: x - scale * y, a, b)
+
+
+def _align_value_and_grad(pcfg: PruneConfig, W, Gamma, stats, prunable, key):
+    """0.5*rho*sum_leaves ||Gamma - S(W)||_F^2 and its W-gradient."""
+    def val(Wp):
+        S = metrics_mod.metric_tree(pcfg.local_metric, Wp, stats, prunable,
+                                    key=key, stoch_frac=pcfg.stoch_frac,
+                                    norm=pcfg.score_norm)
+        tot = jnp.zeros((), jnp.float32)
+        for g, s in zip(jax.tree.leaves(Gamma, is_leaf=lambda x: x is None),
+                        jax.tree.leaves(S, is_leaf=lambda x: x is None)):
+            if g is None or s is None:
+                continue
+            tot += jnp.sum(jnp.square(g - s))
+        return 0.5 * pcfg.rho * tot
+
+    return jax.value_and_grad(val)(W)
+
+
+def search_step(pcfg: PruneConfig, loss_fn: Callable, state: SearchState,
+                batch: dict, stats: PyTree, prunable: PyTree):
+    """One mirror-descent iteration. loss_fn(W, batch) -> (loss, metrics)."""
+    key = jax.random.fold_in(state.rng, state.step)
+    (loss, loss_metrics), g_task = jax.value_and_grad(
+        loss_fn, has_aux=True)(state.W, batch)
+    align, g_align = _align_value_and_grad(
+        pcfg, state.W, state.Gamma, stats, prunable, key)
+
+    lr = pcfg.lr
+    W = jax.tree.map(
+        lambda w, gt, ga: (w - pcfg.kappa * lr *
+                           (gt.astype(jnp.float32) + ga.astype(jnp.float32))),
+        state.W, g_task, g_align)
+
+    if pcfg.mode == "nm":
+        W = jax.tree.map(
+            lambda w, p: prox_mod.prox_nm24(w, pcfg.nm_prox_weight)
+            if (p and w.shape[-2] % 4 == 0) else w,
+            W, prunable)
+
+    S = metrics_mod.metric_tree(pcfg.local_metric, W, stats, prunable,
+                                key=key, stoch_frac=pcfg.stoch_frac,
+                                norm=pcfg.score_norm)
+
+    def upd_v(v, g, s):
+        if v is None:
+            return None
+        return v - pcfg.v_lr * (g - s)  # v_lr == alpha*rho (paper Eq. 6)
+
+    V = jax.tree.map(upd_v, state.V, state.Gamma, S,
+                     is_leaf=lambda x: x is None)
+    Gamma = jax.tree.map(
+        lambda v: None if v is None else prox_mod.soft_threshold(v, pcfg.lam),
+        V, is_leaf=lambda x: x is None)
+
+    nz = jnp.zeros((), jnp.float32)
+    tot = 0
+    for g in jax.tree.leaves(Gamma, is_leaf=lambda x: x is None):
+        if g is None:
+            continue
+        nz += jnp.sum(g != 0)
+        tot += g.size
+    new_state = SearchState(W=W, Gamma=Gamma, V=V, step=state.step + 1,
+                            rng=state.rng)
+    metrics = {"loss": loss, "align": align,
+               "gamma_nonzero_frac": nz / max(tot, 1), **loss_metrics}
+    return new_state, metrics
+
+
+def no_mirror_step(pcfg: PruneConfig, loss_fn: Callable, W: PyTree,
+                   batch: dict, stats: PyTree, prunable: PyTree,
+                   rng: jax.Array, step: jax.Array, *, l2: float):
+    """Ablation (paper Eq. 8 / Table 5): direct objective without the
+    saliency variable or mirror descent - L_task + rho/2||S(W)||^2 + l2||W||^2.
+    Final scores are S(W_final)."""
+    key = jax.random.fold_in(rng, step)
+
+    def total(Wp):
+        loss, aux = loss_fn(Wp, batch)
+        S = metrics_mod.metric_tree(pcfg.local_metric, Wp, stats, prunable,
+                                    key=key, stoch_frac=pcfg.stoch_frac)
+        reg = jnp.zeros((), jnp.float32)
+        wreg = jnp.zeros((), jnp.float32)
+        for s, (w, p) in zip(
+                jax.tree.leaves(S, is_leaf=lambda x: x is None),
+                zip(jax.tree.leaves(Wp), jax.tree.leaves(prunable))):
+            if s is None or not p:
+                continue
+            reg += jnp.sum(jnp.square(s))
+            wreg += jnp.sum(jnp.square(w))
+        return loss + 0.5 * pcfg.rho * reg + l2 * wreg, aux
+
+    (loss, _), g = jax.value_and_grad(total, has_aux=True)(W)
+    W = jax.tree.map(lambda w, gg: w - pcfg.kappa * pcfg.lr * gg, W, g)
+    return W, loss
+
+
+def export_masks(pcfg: PruneConfig, Gamma: PyTree, sparsity: float,
+                 *, V: PyTree | None = None, exact: bool = True) -> PyTree:
+    """One-shot mask extraction from the final Gamma (any sparsity level).
+
+    Soft-thresholded-to-zero entries are tied at |Gamma|=0; the dual V
+    retains their sub-threshold saliency, so it breaks ties at an epsilon
+    scale that cannot reorder any nonzero Gamma entries.
+    """
+    scores = Gamma
+    if V is not None:
+        gmax = max((float(jnp.max(jnp.abs(g))) for g in
+                    jax.tree.leaves(Gamma, is_leaf=lambda x: x is None)
+                    if g is not None), default=0.0)
+        vmax = max((float(jnp.max(jnp.abs(v))) for v in
+                    jax.tree.leaves(V, is_leaf=lambda x: x is None)
+                    if v is not None), default=1.0)
+        eps = 1e-6 * max(gmax, 1e-30) / max(vmax, 1e-30) if gmax > 0 \
+            else 1.0 / max(vmax, 1e-30)
+        scores = jax.tree.map(
+            lambda g, v: None if g is None else jnp.abs(g) + eps * jnp.abs(v),
+            Gamma, V, is_leaf=lambda x: x is None)
+    if pcfg.mode == "nm":
+        return masks_mod.nm_masks(scores, pcfg.nm_n, pcfg.nm_m)
+    return masks_mod.unstructured_masks(scores, sparsity, scope="global",
+                                        exact=exact)

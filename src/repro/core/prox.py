@@ -1,0 +1,73 @@
+"""Proximal operators.
+
+* ``soft_threshold``    - Prox of lam*||.||_1 (the paper's Omega on Gamma).
+* ``prox_nm24``         - Prox of the 2:4-inducing regularizer (Kuebler et
+  al., arXiv:2501.18015)  R(w) = |w1||w2||w3| + |w2||w3||w4| + |w3||w4||w1| +
+  |w4||w1||w2| applied to each contiguous group of 4 along the input dim.
+  Solved per group by a damped Jacobi fixed point on the KKT system
+      u_i = max(0, |w_i| - lam * sum_{pairs (j,k) != i} u_j u_k),
+  signs restored afterwards.  For lam -> inf this zeroes all but the two
+  largest magnitudes (exact 2:4); for small lam it shrinks toward it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_threshold(v: jax.Array, lam: float) -> jax.Array:
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - lam, 0.0)
+
+
+def _pairsum_others(u: jax.Array) -> jax.Array:
+    """For u (..., 4): dR/du_i = sum of products of pairs of the other 3."""
+    u1, u2, u3, u4 = [u[..., i] for i in range(4)]
+    g1 = u2 * u3 + u3 * u4 + u4 * u2
+    g2 = u1 * u3 + u3 * u4 + u4 * u1
+    g3 = u1 * u2 + u2 * u4 + u4 * u1
+    g4 = u1 * u2 + u2 * u3 + u3 * u1
+    return jnp.stack([g1, g2, g3, g4], axis=-1)
+
+
+def prox_nm24(w: jax.Array, lam: float, *, iters: int = 12,
+              damping: float = 0.7) -> jax.Array:
+    """Prox of lam*R_{2:4} on groups of 4 along the second-to-last dim.
+
+    w: (*lead, d_in, d_out) with d_in % 4 == 0.  Groups are contiguous along
+    d_in (the GEMM reduction dim, matching 2:4 hardware layout).
+    """
+    *lead, d_in, d_out = w.shape
+    assert d_in % 4 == 0, d_in
+    wf = w.astype(jnp.float32)
+    g = jnp.moveaxis(wf.reshape(*lead, d_in // 4, 4, d_out), -2, -1)
+    absw = jnp.abs(g)  # (*lead, d_in//4, d_out, 4)
+
+    def body(u, _):
+        u_new = jnp.maximum(absw - lam * _pairsum_others(u), 0.0)
+        return damping * u_new + (1 - damping) * u, None
+
+    u, _ = jax.lax.scan(body, absw, None, length=iters)
+    out = jnp.sign(g) * u
+    out = jnp.moveaxis(out, -1, -2).reshape(*lead, d_in, d_out)
+    return out.astype(w.dtype)
+
+
+def prox_nm24_ref(w: jax.Array, lam: float) -> jax.Array:
+    """Brute-force oracle: joint gradient projection on the 4-vector prox
+    objective 0.5||u - |w|||^2 + lam R(u), u >= 0 (tests only)."""
+    *lead, d_in, d_out = w.shape
+    g = jnp.moveaxis(
+        w.astype(jnp.float32).reshape(*lead, d_in // 4, 4, d_out), -2, -1)
+    absw = jnp.abs(g)
+
+    def obj(u):
+        u1, u2, u3, u4 = [u[..., i] for i in range(4)]
+        r = u1 * u2 * u3 + u2 * u3 * u4 + u3 * u4 * u1 + u4 * u1 * u2
+        return 0.5 * jnp.sum((u - absw) ** 2) + lam * jnp.sum(r)
+
+    u = absw
+    lr = 0.05
+    for _ in range(2000):
+        u = jnp.maximum(u - lr * jax.grad(obj)(u), 0.0)
+    out = jnp.sign(g) * u
+    return jnp.moveaxis(out, -1, -2).reshape(*lead, d_in, d_out).astype(w.dtype)

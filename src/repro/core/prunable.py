@@ -1,0 +1,44 @@
+"""Which parameters UniPruning prunes.
+
+The paper targets "MLP layers and attention projection layers": every 2-D+
+projection kernel, excluding embeddings, routers, convs, norms, positional
+tables and small adapters.  Expert tensors (E, d_in, d_out) are included with
+their leading expert dim treated as batch.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+EXCLUDE_SUBSTRINGS = (
+    "embed", "lm_head", "router", "conv", "pos_embed", "vit_proj",
+    "frame_proj", "lora_", "['r']",  # sLSTM recurrent gate kernel: kept dense
+)
+
+
+def is_prunable_path(pathstr: str, leaf: Any) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if "kernel" not in pathstr:
+        return False
+    return not any(s in pathstr for s in EXCLUDE_SUBSTRINGS)
+
+
+def prunable_map(params: Any) -> Any:
+    """Pytree of bools (True = prunable) matching params."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [is_prunable_path(jax.tree_util.keystr(kp), leaf)
+           for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_prunable(params: Any) -> tuple[int, int]:
+    """(prunable_param_count, total_param_count)."""
+    pm = prunable_map(params)
+    tot = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    pru = sum(int(np.prod(x.shape))
+              for x, m in zip(jax.tree.leaves(params), jax.tree.leaves(pm))
+              if m)
+    return pru, tot

@@ -1,0 +1,109 @@
+"""Activation-statistics tape.
+
+UniPruning's local metrics S(W, X) need, per prunable projection, the L2 norm
+of each *input feature* over the calibration set (Wanda's ||X_j||_2).  The
+tape intercepts ``repro.models.common.dense`` (and the MoE expert einsums)
+during an **eager, unrolled** calibration pass and accumulates per-feature
+sum-of-squares.
+
+Keying: scan-stacked layer parameters are sliced per layer during the
+unrolled pass, so leaf ``id()`` alone cannot name them.  The model registers
+each sliced layer tree under a (path, layer_index) tag; stats for stacked
+leaves are re-stacked along the layer axis at resolve time.
+
+At production scale the same statistics come out of a jitted per-layer pass;
+the tape is the reference implementation (stats are identical either way).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_local = threading.local()
+
+
+def _paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class StatsTape:
+    def __init__(self):
+        # id(kernel) -> (pathstr, layer_idx)
+        self.registry: dict[int, tuple[str, int]] = {}
+        # (pathstr, layer_idx) -> [sumsq fp64, count]
+        self.sumsq: dict[tuple[str, int], list] = {}
+
+    def register_layer(self, tree: Any, prefix: str, layer_idx: int) -> None:
+        for pathstr, leaf in _paths(tree):
+            if isinstance(leaf, (jax.Array, np.ndarray)):
+                self.registry[id(leaf)] = (prefix + pathstr, layer_idx)
+
+    def record(self, kernel, x) -> None:
+        """Accumulate stats with shape kernel.shape[:-1]."""
+        key = self.registry.get(id(kernel))
+        if key is None:
+            return
+        nlead = kernel.ndim - 2
+        axes = tuple(range(nlead, x.ndim - 1))
+        ss = np.asarray(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes),
+                        np.float64)
+        n = int(np.prod([x.shape[a] for a in axes])) if axes else 1
+        ent = self.sumsq.get(key)
+        if ent is None:
+            self.sumsq[key] = [ss, n]
+        else:
+            ent[0] += ss
+            ent[1] += n
+
+
+def current_tape() -> StatsTape | None:
+    return getattr(_local, "tape", None)
+
+
+@contextlib.contextmanager
+def recording(tape: StatsTape):
+    prev = current_tape()
+    _local.tape = tape
+    try:
+        yield tape
+    finally:
+        _local.tape = prev
+
+
+def resolve_stats(tape: StatsTape, params: Any) -> Any:
+    """Build a stats pytree matching ``params``.
+
+    For every kernel leaf seen by the tape: per-input-feature activation
+    norm a_j = ||X_j||_2 over the whole calibration set (Wanda's statistic,
+    unnormalized) with shape kernel.shape[:-1]; stacked leaves get their
+    layer axis back.  Unseen leaves -> None.
+    """
+    by_path: dict[str, dict[int, np.ndarray]] = {}
+    counts: dict[str, dict[int, int]] = {}
+    for (pathstr, layer_idx), (ss, n) in tape.sumsq.items():
+        by_path.setdefault(pathstr, {})[layer_idx] = ss
+        counts.setdefault(pathstr, {})[layer_idx] = n
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, leaf in flat:
+        pathstr = jax.tree_util.keystr(kp)
+        rec = by_path.get(pathstr)
+        if rec is None:
+            out.append(None)
+            continue
+        idxs = sorted(rec)
+        # Wanda-faithful: UNnormalized ||X_j||_2 over the calibration set
+        arrs = [np.sqrt(rec[i]) for i in idxs]
+        if len(idxs) == 1 and idxs[0] == -1:       # unstacked leaf
+            a = arrs[0]
+        else:                                      # re-stack layer axis
+            a = np.stack(arrs, axis=0)
+        out.append(jnp.asarray(a, jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, out)

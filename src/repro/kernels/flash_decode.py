@@ -1,0 +1,97 @@
+"""Split-KV decode attention Pallas kernel (flash-decoding style).
+
+One query token vs a long KV cache is pure HBM streaming: arithmetic
+intensity ~ 2 flops/byte, far below the v5e ridge (~240).  The kernel tiles
+the KV capacity dim, keeps a running (m, l, acc) softmax state in VMEM
+scratch, and writes the normalized output on the final chunk - one pass over
+KV, no (C,)-sized logits materialized in HBM.
+
+Masking comes in as an additive bias vector (0 / -inf per slot), computed
+once outside from ring positions - so the same kernel serves dense, ring
+(sliding-window) and sequence-sharded caches (the partial (m, l, acc)
+combine across shards is decode_attend's psum path).
+
+Grid: (B, K_heads, C/bc), last dim arbitrary (sequential accumulation).
+Real-TPU note: G (=H/K) and D tiles should be padded to (8, 128) lanes; the
+oracle-validated interpret path accepts any shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, nc, scale):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bc, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bc, Dv)
+    s = (q @ k.T) * scale + bias_ref[0]            # (G, bc)
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(pl.program_id(2) == nc - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def flash_decode(q, k, v, bias, *, scale=None, bc: int = 512,
+                 interpret: bool = False):
+    """q: (B, K, G, D); k/v: (B, C, K, D/Dv); bias: (B, C) additive mask.
+
+    Returns (B, K, G, Dv).
+    """
+    B, K, G, D = q.shape
+    C = k.shape[1]
+    Dv = v.shape[-1]
+    bc = min(bc, C)
+    assert C % bc == 0, (C, bc)
+    scale = D ** -0.5 if scale is None else scale
+    nc = C // bc
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, nc=nc, scale=scale),
+        grid=(B, K, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, bc, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bc, 1, Dv), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bc), lambda b, h, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, Dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, Dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, bias)
+
+
+def flash_decode_ref(q, k, v, bias, *, scale=None):
+    """Materialized oracle."""
+    B, K, G, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bkgd,bckd->bkgc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgc,bckd->bkgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""2:4 structured-sparse matmul Pallas kernel (TPU adaptation of the paper's
+NVIDIA-sparse-tensor-core speedup, Table 8).
+
+TPU MXUs have no sparse mode, so the win is HBM *bandwidth*: decode-shape
+GEMMs are memory-bound (arithmetic intensity ~ batch << 240 flops/byte), and
+a 2:4 weight stored compressed moves ~9/16 of the dense bf16 bytes
+(values K/2*N*2B + 8-bit indices K/2*N*1B vs dense K*N*2B; 2-bit packed
+indices push that to ~9/32).  The kernel streams compressed tiles HBM->VMEM,
+expands them to dense in-register on the VPU (a masked broadcast - no
+gather), and feeds the MXU a normal dense matmul.
+
+Layout: W (K, N) pruned 2:4 along K (the reduction dim).  Compressed:
+  vals (K/2, N)  bf16   - the two surviving values per group of 4
+  idx  (K/2, N)  int8   - their in-group positions (0..3), ascending
+
+Block tiling: (bm x bk) @ (bk x bn) with compressed operand tiles
+(bk/2 x bn); K is the innermost (arbitrary) grid dim accumulating into an
+f32 VMEM scratch, flushed to the output on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _expand_tile(vals, idx):
+    """(bk/2, bn) compressed -> (bk, bn) dense, in-register.
+
+    Group g occupies dense rows 4g..4g+3; compressed rows 2g, 2g+1 carry
+    (value, position).  dense[4g + r, n] = sum_j vals[2g+j, n] * (idx==r).
+    """
+    half, bn = vals.shape
+    g = half // 2
+    v = vals.reshape(g, 2, bn)
+    p = idx.reshape(g, 2, bn)
+    r = jax.lax.broadcasted_iota(jnp.int8, (g, 4, bn), 1)  # in-group row
+    dense = jnp.zeros((g, 4, bn), vals.dtype)
+    for j in range(2):
+        hit = p[:, j:j + 1, :] == r
+        dense = dense + jnp.where(hit, v[:, j:j + 1, :], 0)
+    return dense.reshape(g * 4, bn)
+
+
+def _nm_matmul_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dense_w = _expand_tile(vals_ref[...], idx_ref[...])
+    acc_ref[...] += jnp.dot(x_ref[...], dense_w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
+              bm: int = 128, bk: int = 512, bn: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ 2:4-compressed W (K, N) -> (M, N) in x.dtype."""
+    M, K = x.shape
+    halfK, N = vals.shape
+    assert halfK * 2 == K and idx.shape == (halfK, N), (x.shape, vals.shape)
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and bk % 4 == 0
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_nm_matmul_kernel, nk=nk),
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, vals, idx)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --- nm_spmm ---------------------------------------------------------------
+
+def compress_24(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dense (K, N) (assumed or forced 2:4 along K) -> (vals, idx).
+
+    Keeps the top-2 |w| per contiguous group of 4 along K, positions
+    ascending.  Exact inverse of decompress_24 for genuinely 2:4 inputs.
+    """
+    K, N = w.shape
+    assert K % 4 == 0
+    g = w.reshape(K // 4, 4, N)
+    order = jnp.argsort(-jnp.abs(g), axis=1)[:, :2]        # (K/4, 2, N)
+    idx = jnp.sort(order, axis=1).astype(jnp.int8)
+    vals = jnp.take_along_axis(g, idx.astype(jnp.int32), axis=1)
+    return vals.reshape(K // 2, N).astype(w.dtype), idx.reshape(K // 2, N)
+
+
+def decompress_24(vals: jax.Array, idx: jax.Array) -> jax.Array:
+    halfK, N = vals.shape
+    g = halfK // 2
+    v = vals.reshape(g, 2, N)
+    p = idx.reshape(g, 2, N).astype(jnp.int32)
+    r = jnp.arange(4)[None, :, None]
+    dense = jnp.zeros((g, 4, N), vals.dtype)
+    for j in range(2):
+        dense = dense + jnp.where(p[:, j:j + 1] == r, v[:, j:j + 1], 0)
+    return dense.reshape(g * 4, N)
+
+
+def nm_matmul_ref(x: jax.Array, vals: jax.Array, idx: jax.Array) -> jax.Array:
+    w = decompress_24(vals, idx)
+    return (x @ w.astype(x.dtype)).astype(x.dtype)
+
+
+# --- saliency_fuse ---------------------------------------------------------
+
+def saliency_step_ref(w, a, gamma, v, *, v_lr: float, lam: float,
+                      rowsum=None, colsum=None):
+    """One fused local-metric + dual + prox step (fp32 math).
+
+    S = |w| * a[:, None]                          (wanda; a = ||X_j||_2)
+    or, when rowsum/colsum given (RIA family):
+    S = (|w|/rowsum + |w|/colsum) * sqrt(a)[:, None]
+    V' = v - v_lr * (gamma - S);  Gamma' = soft(V', lam).
+    """
+    wf = jnp.abs(w.astype(jnp.float32))
+    af = a.astype(jnp.float32)
+    if rowsum is None:
+        s = wf * af[:, None]
+    else:
+        s = (wf / (rowsum.astype(jnp.float32) + 1e-12)
+             + wf / (colsum.astype(jnp.float32) + 1e-12)) * \
+            jnp.sqrt(jnp.maximum(af, 1e-12))[:, None]
+    v_new = v.astype(jnp.float32) - v_lr * (gamma.astype(jnp.float32) - s)
+    gamma_new = jnp.sign(v_new) * jnp.maximum(jnp.abs(v_new) - lam, 0.0)
+    return v_new, gamma_new
+
+
+# --- nm_prox / nm mask -----------------------------------------------------
+
+def nm_mask_ref(s: jax.Array, n: int = 2, m: int = 4) -> jax.Array:
+    """Top-n per contiguous group of m along axis 0 (ties -> lower index).
+
+    Rank-based: element i is kept iff fewer than n elements beat it, where
+    "beats" = strictly greater, or equal with a lower position.
+    """
+    K, N = s.shape
+    g = jnp.abs(s.astype(jnp.float32)).reshape(K // m, m, N)
+    gi = g[:, :, None, :]
+    gj = g[:, None, :, :]
+    pos = jnp.arange(m)
+    j_earlier = pos[None, None, :, None] < pos[None, :, None, None]
+    rank = jnp.sum((gj > gi) | ((gj == gi) & j_earlier), axis=2)
+    return (rank < n).reshape(K, N)
+
+
+def prox24_ref(w: jax.Array, lam: float, *, iters: int = 12,
+               damping: float = 0.7) -> jax.Array:
+    """Mirror of core.prox.prox_nm24 for 2-D inputs (oracle shared there)."""
+    from repro.core.prox import prox_nm24
+    return prox_nm24(w, lam, iters=iters, damping=damping)

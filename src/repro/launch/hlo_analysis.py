@@ -1,0 +1,224 @@
+"""Post-SPMD HLO analysis with while-loop trip-count awareness.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE (XLA while
+bodies are not multiplied by trip count), which under-counts layer-stacked
+models by 10-100x.  This module parses the optimized HLO text, builds the
+computation call graph (entry -> while bodies -> fusions), extracts per-
+computation dot-FLOPs / materialized bytes / collective bytes, and rolls
+them up with multiplicity = product of enclosing while trip counts.
+
+Format notes (XLA:CPU optimized dumps):
+  * computation headers start at column 0: ``%name (sig) -> type {``;
+    instruction lines are indented; ``}`` closes.
+  * operands are referenced by name only - shapes come from each
+    instruction's own definition, so we keep a per-computation symbol table.
+  * XLA may "widen" (unroll x2) while loops; trip counts come from the
+    ``constant(N)`` in the loop condition, so flops stay exact
+    (N_wide * 2 bodies == N_orig * 1 body).
+
+Conventions:
+  * dot flops        = 2 * numel(out) * prod(lhs contracted dims)
+  * bytes            = sum of instruction OUTPUT sizes (parameters, tuples,
+    GTEs, bitcasts, whiles, fusion internals excluded) = unique materialized
+    buffers; the roofline memory term uses 2x (write + read).
+  * collective bytes = wire convention: all-gather/all-to-all/permute ->
+    output size; all-reduce -> 2x size; reduce-scatter -> group_size x out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import re
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+               "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+NO_BYTES_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+                "bitcast(", "bitcast-convert(", "after-all(", "while(",
+                "partition-id(", "replica-id(", "custom-call(",
+                "conditional(", "call(")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    bytes_out: float = 0.0
+    dus_bytes: float = 0.0   # dynamic-update-slice targets (in-place)
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)
+    trip_hint: int = 1
+
+
+def _parse_computations(text: str) -> tuple[dict[str, list[str]], str]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"^(ENTRY\s+)?%([\w\.\-]+)\s+\(", line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if line.strip().startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _analyze_comp(lines: list[str]) -> CompStats:
+    st = CompStats()
+    shapes: dict[str, tuple[str, list[int]]] = {}
+    parsed = []
+    for line in lines:
+        m = _DEF.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        sm = _SHAPE.search(rhs)
+        if sm:
+            shapes[name] = (sm.group(1),
+                            [int(x) for x in sm.group(2).split(",") if x])
+        parsed.append((name, rhs))
+
+    max_const = 1
+    for name, rhs in parsed:
+        dt, dims = shapes.get(name, ("f32", []))
+        numel = 1
+        for d in dims:
+            numel *= d
+        nbytes = numel * DTYPE_BYTES.get(dt, 4)
+
+        if " dot(" in rhs:
+            cm = _CONTRACT.search(rhs)
+            contracted = 1
+            if cm is not None:
+                dims_idx = [int(x) for x in cm.group(1).split(",") if x]
+                inner = rhs.split(" dot(", 1)[1]
+                ops = _OPERANDS.findall(inner)
+                if ops and ops[0] in shapes:
+                    lhs_dims = shapes[ops[0]][1]
+                    for di in dims_idx:
+                        if di < len(lhs_dims):
+                            contracted *= lhs_dims[di]
+            st.dot_flops += 2.0 * numel * contracted
+
+        is_coll = next((c for c in COLLECTIVES if f" {c}(" in rhs), None)
+        if is_coll and "-start" not in rhs:
+            g = _GROUPS.search(rhs)
+            gs = int(g.group(2)) if g else 0
+            traffic = nbytes
+            if is_coll == "all-reduce":
+                traffic = 2 * nbytes
+            elif is_coll == "reduce-scatter":
+                traffic = nbytes * max(gs, 1)
+            st.coll_bytes += traffic
+            st.coll_by_op[is_coll] = st.coll_by_op.get(is_coll, 0.0) + traffic
+
+        if "dynamic-update-slice" in rhs or "dynamic-update-slice" in name:
+            # in-place update (plain op or DUS fusion): a loop's DUS covers
+            # its buffer ONCE over all iterations, so this accrues at the
+            # multiplicity of the enclosing loop INSTANCE (see visit()).
+            st.dus_bytes += nbytes
+        elif not any(op in rhs for op in NO_BYTES_OPS):
+            st.bytes_out += nbytes
+
+        if " while(" in rhs:
+            cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            body = re.search(r"body=%?([\w\.\-]+)", rhs)
+            if cond and body:
+                st.calls.append(("while", body.group(1), cond.group(1)))
+        elif "fusion(" in rhs:
+            c = re.search(r"calls=%?([\w\.\-]+)", rhs)
+            if c:
+                st.calls.append(("fusion", c.group(1), None))
+        elif "conditional(" in rhs:
+            for c in re.findall(r"branch_computations=\{([^}]*)\}", rhs):
+                for b in re.findall(r"%([\w\.\-]+)", c):
+                    st.calls.append(("call", b, None))
+        elif " call(" in rhs:
+            c = re.search(r"to_apply=%?([\w\.\-]+)", rhs)
+            if c:
+                st.calls.append(("call", c.group(1), None))
+
+        cm = re.search(r"s32\[\] constant\((\d+)\)", rhs)
+        if cm:
+            max_const = max(max_const, int(cm.group(1)))
+    st.trip_hint = max_const
+    return st
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops: float
+    bytes_out: float
+    coll_bytes: float
+    coll_by_op: dict
+    n_while: int
+    trip_counts: list
+
+
+def analyze(text: str) -> HloSummary:
+    raw, entry = _parse_computations(text)
+    comps = {name: _analyze_comp(lines) for name, lines in raw.items()}
+    if entry is None:
+        entry = next(iter(comps))
+    total = HloSummary(0.0, 0.0, 0.0, {}, 0, [])
+
+    def visit(name: str, mult: float, parent_mult: float, in_fusion: bool,
+              depth: int = 0):
+        st = comps.get(name)
+        if st is None or depth > 64:
+            return
+        total.dot_flops += mult * st.dot_flops
+        if not in_fusion:
+            total.bytes_out += mult * st.bytes_out + \
+                parent_mult * st.dus_bytes
+            total.coll_bytes += mult * st.coll_bytes
+            for k, v in st.coll_by_op.items():
+                total.coll_by_op[k] = total.coll_by_op.get(k, 0) + mult * v
+        for kind, callee, cond in st.calls:
+            if kind == "while":
+                trip = comps[cond].trip_hint if cond in comps else 1
+                total.n_while += 1
+                total.trip_counts.append(trip)
+                visit(callee, mult * trip, mult, in_fusion, depth + 1)
+            elif kind == "fusion":
+                visit(callee, mult, parent_mult, True, depth + 1)
+            else:
+                visit(callee, mult, parent_mult, in_fusion, depth + 1)
+
+    visit(entry, 1.0, 1.0, False)
+    return total
+
+
+def analyze_file(path) -> HloSummary:
+    op = gzip.open if str(path).endswith(".gz") else open
+    with op(path, "rt") as f:
+        return analyze(f.read())

@@ -1,0 +1,151 @@
+"""Shape-cell semantics: step functions + input specs per (arch x cell).
+
+  train_4k    -> train_step   (fwd+bwd+AdamW, grad-accum microbatching, remat)
+  prefill_32k -> serve_prefill (fwd, fills KV caches, last-token logits)
+  decode_32k  -> serve_step   (1 token against a full cache)
+  long_500k   -> serve_step   (batch=1, sequence-sharded KV)
+
+[audio]/[vlm] frontends are stubs: input_specs() provides precomputed frame/
+patch embeddings.  Whisper splits a cell's seq_len as enc S/2 + dec S/2.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import model as M
+from repro.optim import optimizers as opt
+from repro.optim.losses import lm_loss
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.is_encoder_decoder:
+        return {"tokens": _sds((B, S // 2), jnp.int32),
+                "frames": _sds((B, S // 2, cfg.d_model), jnp.bfloat16)}
+    if cfg.vit_dim:
+        return {"tokens": _sds((B, S - cfg.num_image_tokens), jnp.int32),
+                "patches": _sds((B, cfg.num_image_tokens, cfg.vit_dim),
+                                jnp.bfloat16)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def cache_capacity(cfg: ModelConfig, cell: ShapeCell) -> int:
+    return cell.seq_len // 2 if cfg.is_encoder_decoder else cell.seq_len
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell) -> PyTree:
+    cap = cache_capacity(cfg, cell)
+    enc_len = cell.seq_len // 2 if cfg.is_encoder_decoder else 0
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, cell.global_batch, cap, enc_len))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """All inputs for the cell's step function (excluding weights/opt)."""
+    if cell.kind == "train":
+        return {"batch": token_specs(cfg, cell)}
+    if cell.kind == "prefill":
+        return {"batch": token_specs(cfg, cell)}
+    # decode
+    return {"token": _sds((cell.global_batch,), jnp.int32),
+            "caches": cache_specs(cfg, cell),
+            "t": _sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def choose_accum(cfg: ModelConfig, cell: ShapeCell, dp: int,
+                 target_per_device: int = 1) -> int:
+    """Grad-accum factor so each device sees ~target_per_device rows/micro."""
+    per_dev = max(cell.global_batch // dp, 1)
+    accum = max(per_dev // target_per_device, 1)
+    while cell.global_batch % (accum * dp) != 0 and accum > 1:
+        accum -= 1
+    return accum
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig, *,
+                    accum: int = 1, remat: bool = True,
+                    cast_bf16: bool = False):
+    def loss_fn(params, mb):
+        return lm_loss(cfg, params, mb, remat=remat)
+
+    def train_step(params, ostate, batch):
+        def reshape(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+        micro_batches = jax.tree.map(reshape, batch)
+        # one bf16 cast of the sharded fp32 masters BEFORE the microbatch
+        # loop: every FSDP all-gather inside the layer scan then moves bf16
+        # (2x less ICI) and the cast runs once, not once per microbatch.
+        compute_params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (cast_bf16 and p.dtype == jnp.float32 and p.ndim >= 2) else p,
+            params)
+
+        def micro(g_acc, mb):
+            (l, m), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(compute_params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return g_acc, l
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if accum == 1:
+            g, losses = micro(g0, jax.tree.map(lambda x: x[0], micro_batches))
+            losses = losses[None]
+        else:
+            g, losses = jax.lax.scan(micro, g0, micro_batches)
+        g = jax.tree.map(lambda x: x / accum, g)
+        params, ostate, om = opt.adamw_update(ocfg, g, ostate, params)
+        return params, ostate, {"loss": jnp.mean(losses), **om}
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, cell: ShapeCell):
+    cap = cache_capacity(cfg, cell)
+
+    def serve_prefill(params, batch):
+        logits, caches = M.prefill(cfg, params, batch, cache_capacity=cap)
+        return logits, caches
+
+    return serve_prefill
+
+
+def make_decode(cfg: ModelConfig, cell: ShapeCell, *, seq_sharded: bool):
+    def serve_step(params, token, caches, t):
+        return M.decode_step(cfg, params, token, caches, t,
+                             seq_sharded=seq_sharded)
+
+    return serve_step
+
+
+def make_search_step(cfg: ModelConfig, pcfg, *, remat: bool = True):
+    """UniPruning mirror-descent step (the paper's workload) for dry-runs."""
+    from repro.core import mirror
+
+    def loss_fn(W, batch):
+        return lm_loss(cfg, W, batch, remat=remat)
+
+    def search_step(state, batch, stats, prunable):
+        return mirror.search_step(pcfg, loss_fn, state, batch, stats, prunable)
+
+    return search_step

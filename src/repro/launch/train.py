@@ -1,0 +1,94 @@
+"""Training / pruning-search launcher.
+
+Runs on whatever devices exist (CPU smoke -> TPU pod): builds the mesh,
+shards params/optimizer with the production rules, wires the data loader,
+checkpoints atomically every --ckpt-every steps and resumes (weights, opt
+state, data cursor) after a restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 20 --batch 8 --seq 256 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.synthetic import DataCursor, ShardedLoader
+from repro.dist import sharding as shd
+from repro.dist.axes import use_rules
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import optimizers as opt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(model=args.model_axis)
+    rules = shd.make_production_rules(mesh)
+    ocfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                           warmup_steps=max(args.steps // 10, 1))
+
+    with mesh, use_rules(rules):
+        params = M.init_params(cfg, jax.random.key(0))
+        p_sh = shd.params_sharding(M.param_axes(cfg), params, rules)
+        params = jax.device_put(params, p_sh)
+        ostate = opt.adamw_init(params)
+        step_fn = jax.jit(make_train_step(cfg, ocfg, accum=args.accum,
+                                          remat=True),
+                          donate_argnums=(0, 1))
+
+        start = 0
+        mgr = None
+        if args.ckpt_dir:
+            mgr = CheckpointManager(args.ckpt_dir)
+            if mgr.latest_step() is not None:
+                (params, ostate), meta = mgr.restore(
+                    (params, ostate),
+                    shardings=(p_sh, jax.tree.map(lambda _: None, ostate)))
+                params = jax.device_put(params, p_sh)
+                start = meta["next_step"]
+                print(f"resumed at step {start}")
+
+        loader = ShardedLoader(cfg, global_batch=args.batch, seq=args.seq,
+                               cursor=DataCursor(index=start))
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in
+                     next(loader).items()}
+            params, ostate, metrics = step_fn(params, ostate, batch)
+            if step % args.log_every == 0:
+                print(f"step {step} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                mgr.save_async(step + 1, (params, ostate),
+                               metadata={"next_step": step + 1})
+        if mgr:
+            mgr.save(args.steps, (params, ostate),
+                     metadata={"next_step": args.steps})
+        print("done:", float(metrics["loss"]))
+
+
+if __name__ == "__main__":
+    main()

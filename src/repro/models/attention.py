@@ -1,0 +1,505 @@
+"""Attention: GQA + RoPE + sliding-window + softcap + QK-norm + MLA.
+
+Three execution paths:
+
+* ``flash_attention``   - chunked, custom-VJP, O(S) memory; used for train and
+  prefill shapes (4k-32k).  Outer Python loop over query blocks (static,
+  triangle-exact for causal masks), inner ``lax.scan`` over kv blocks with a
+  running (m, l, acc) softmax state.  The backward pass recomputes logits
+  flash-style, so nothing quadratic is ever saved.
+* ``decode_attend``     - single-token decode against a KV cache (ring buffer
+  for sliding-window layers).  For sequence-sharded caches (long-context,
+  batch=1) the softmax reductions run over the sharded seq dim and GSPMD
+  lowers them to tiny all-reduces - no KV all-gather.
+* MLA (DeepSeek-style low-rank KV) with absorbed-matmul decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axes import constrain
+from repro.models import common as cm
+from repro.models.common import Builder
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure-jnp, custom VJP)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(qpos, kpos, *, causal: bool, window: int, kv_valid: int | None):
+    """Additive mask bias (0 or NEG_INF). qpos: (Sq,), kpos: (Sk,)."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    if kv_valid is not None:
+        ok &= (kpos < kv_valid)[None, :]
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _qk(q, k, scale, softcap):
+    # q: (B, Sq, K, G, D)  k: (B, Sk, K, D) -> (B, K, G, Sq, Sk) fp32
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    if softcap:
+        s = cm.softcap(s, softcap)
+    return s
+
+
+def _flash_fwd_block(q_blk, k, v, *, qpos, causal, window, kv_valid, softcap,
+                     scale, kv_block):
+    """One query block vs all (needed) kv blocks. Returns (o, m, l)."""
+    B, Sq, K, G, D = q_blk.shape
+    Sk = k.shape[1]
+    nkv = Sk // kv_block
+
+    def body(carry, ikv):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ikv * kv_block, kv_block, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ikv * kv_block, kv_block, axis=1)
+        kpos = ikv * kv_block + jnp.arange(kv_block)
+        s = _qk(q_blk, ks, scale, softcap)
+        s = s + _mask_bias(qpos, kpos, causal=causal, window=window,
+                           kv_valid=kv_valid)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l, acc), None
+
+    Dv = v.shape[-1]
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, K, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+    o = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return o, m, l
+
+
+def _flash_bwd_block(res, do_blk):
+    """Backward for one query block. Returns (dq_blk, dk, dv) fp32 full-size."""
+    (q_blk, k, v, o_blk, L_blk, qpos, causal, window, kv_valid, softcap, scale,
+     kv_block) = res
+    B, Sq, K, G, D = q_blk.shape
+    Sk = k.shape[1]
+    nkv = Sk // kv_block
+    do_f = do_blk.astype(jnp.float32)
+    Drow = jnp.sum(do_f * o_blk.astype(jnp.float32), axis=-1)  # (B,Sq,K,G)
+    Drow = Drow.transpose(0, 2, 3, 1)  # (B,K,G,Sq)
+
+    def body(carry, ikv):
+        dq, dk, dv = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ikv * kv_block, kv_block, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, ikv * kv_block, kv_block, axis=1)
+        kpos = ikv * kv_block + jnp.arange(kv_block)
+        raw = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, ks,
+                         preferred_element_type=jnp.float32) * scale
+        if softcap:
+            t = jnp.tanh(raw / softcap)
+            s = t * softcap
+        else:
+            s = raw
+        bias = _mask_bias(qpos, kpos, causal=causal, window=window,
+                          kv_valid=kv_valid)[None, None, None]
+        p = jnp.exp(s + bias - L_blk[..., None])  # (B,K,G,Sq,Sk)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", do_f, vs.astype(jnp.float32))
+        dvs = jnp.einsum("bkgqs,bqkgd->bskd", p, do_f)
+        ds = p * (dp - Drow[..., None])
+        if softcap:
+            ds = ds * (1.0 - t * t)
+        ds = ds * scale
+        dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds, ks.astype(jnp.float32))
+        dks = jnp.einsum("bkgqs,bqkgd->bskd", ds, q_blk.astype(jnp.float32))
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, ikv * kv_block, kv_block, 1) + dks,
+            ikv * kv_block, axis=1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, ikv * kv_block, kv_block, 1) + dvs,
+            ikv * kv_block, axis=1)
+        return (dq, dk, dv), None
+
+    Dv = v.shape[-1]
+    dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    dk0 = jnp.zeros((B, Sk, K, D), jnp.float32)
+    dv0 = jnp.zeros((B, Sk, K, Dv), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), jnp.arange(nkv))
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, kv_valid, softcap, scale, q_block, kv_block):
+    out, _ = _flash_fwd(q, k, v, causal, window, kv_valid, softcap, scale,
+                        q_block, kv_block)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, kv_valid, softcap, scale, q_block, kv_block):
+    B, Sq, K, G, D = q.shape
+    Sk = k.shape[1]
+    os, Ls = [], []
+    for iq in range(Sq // q_block):
+        qpos = (Sk - Sq) + iq * q_block + jnp.arange(q_block)
+        q_blk = q[:, iq * q_block:(iq + 1) * q_block]
+        # causal: only kv blocks whose start can be visible (static bound)
+        if causal:
+            hi = min(Sk, (Sk - Sq) + (iq + 1) * q_block)
+            nkv = -(-hi // kv_block)
+        else:
+            nkv = Sk // kv_block
+        o, m, l = _flash_fwd_block(
+            q_blk, k[:, :nkv * kv_block], v[:, :nkv * kv_block], qpos=qpos,
+            causal=causal, window=window, kv_valid=kv_valid, softcap=softcap,
+            scale=scale, kv_block=kv_block)
+        os.append(o)
+        Ls.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+    out = jnp.concatenate(os, axis=1).astype(q.dtype)
+    L = jnp.concatenate(Ls, axis=3)  # (B,K,G,Sq)
+    return out, (q, k, v, out, L)
+
+
+def _flash_bwd(causal, window, kv_valid, softcap, scale, q_block, kv_block,
+               res, do):
+    q, k, v, out, L = res
+    B, Sq, K, G, D = q.shape
+    Sk = k.shape[1]
+    dqs = []
+    dk = jnp.zeros((B, Sk, K, D), jnp.float32)
+    dv = jnp.zeros((B, Sk, K, v.shape[-1]), jnp.float32)
+    for iq in range(Sq // q_block):
+        sl = slice(iq * q_block, (iq + 1) * q_block)
+        qpos = (Sk - Sq) + iq * q_block + jnp.arange(q_block)
+        if causal:
+            hi = min(Sk, (Sk - Sq) + (iq + 1) * q_block)
+            nkv = -(-hi // kv_block)
+        else:
+            nkv = Sk // kv_block
+        n = nkv * kv_block
+        dq_blk, dk_p, dv_p = _flash_bwd_block(
+            (q[:, sl], k[:, :n], v[:, :n], out[:, sl], L[:, :, :, sl], qpos,
+             causal, window, kv_valid, softcap, scale, kv_block), do[:, sl])
+        dqs.append(dq_blk)
+        dk = dk.at[:, :n].add(dk_p)
+        dv = dv.at[:, :n].add(dv_p)
+    dq = jnp.concatenate(dqs, axis=1).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, kv_valid=None,
+                    attn_softcap=0.0, scale=None, q_block=None, kv_block=None):
+    """q: (B,Sq,H,D) or (B,Sq,K,G,D); k,v: (B,Sk,K,D). Returns (B,Sq,H,D)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        B, Sq, H, D = q.shape
+        K = k.shape[2]
+        q = q.reshape(B, Sq, K, H // K, D)
+    B, Sq, K, G, D = q.shape
+    Sk = k.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    q_block = q_block or min(512, Sq)
+    kv_block = kv_block or min(512, Sk)
+    assert Sq % q_block == 0 and Sk % kv_block == 0, (Sq, q_block, Sk, kv_block)
+    out = _flash(q, k, v, causal, window, kv_valid, attn_softcap, scale,
+                 q_block, kv_block)
+    return out.reshape(B, Sq, K * G, v.shape[-1]) if squeeze else out
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, kv_valid=None,
+                        attn_softcap=0.0, scale=None):
+    """Materialized-logits oracle for tests."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, Sq, K, H // K, D)
+    scale = D ** -0.5 if scale is None else scale
+    s = _qk(qg, k, scale, attn_softcap)
+    Sk = k.shape[1]
+    qpos = (Sk - Sq) + jnp.arange(Sq)
+    s = s + _mask_bias(qpos, jnp.arange(Sk), causal=causal, window=window,
+                       kv_valid=kv_valid)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Standard attention module (init/apply)
+# ---------------------------------------------------------------------------
+
+def attn_init(b: Builder, *, d_model: int, num_heads: int, num_kv: int,
+              head_dim: int, qk_norm: bool = False) -> PyTree:
+    p = {
+        "wq": cm.dense_init(b, d_model, num_heads * head_dim, ("embed", "qkv")),
+        "wk": cm.dense_init(b, d_model, num_kv * head_dim, ("embed", "qkv")),
+        "wv": cm.dense_init(b, d_model, num_kv * head_dim, ("embed", "qkv")),
+        "wo": cm.dense_init(b, num_heads * head_dim, d_model, ("qkv", "embed")),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": b.param((head_dim,), (None,), init="zeros")}
+        p["k_norm"] = {"scale": b.param((head_dim,), (None,), init="zeros")}
+    return p
+
+
+def _qk_normed(p, q, k):
+    if "q_norm" in p:
+        q = cm.rmsnorm(p["q_norm"], q)
+        k = cm.rmsnorm(p["k_norm"], k)
+    return q, k
+
+
+def make_kv_cache(batch: int, capacity: int, num_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> PyTree:
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv, head_dim), dtype),
+    }
+
+
+def attn_apply_full(p: PyTree, x: jax.Array, *, positions: jax.Array,
+                    num_heads: int, num_kv: int, head_dim: int,
+                    rope_theta: float = 1e4, use_rope: bool = True,
+                    causal: bool = True, window: int = 0,
+                    attn_softcap: float = 0.0, scale: float | None = None,
+                    cache_capacity: int = 0,
+                    kv_override: tuple[jax.Array, jax.Array] | None = None,
+                    qkv_delta=None,
+                    ) -> tuple[jax.Array, PyTree | None]:
+    """Train / prefill path. Returns (y, kv_cache or None)."""
+    B, S, _ = x.shape
+    dq = dk = dv = 0
+    if qkv_delta is not None:  # LoRA deltas (zamba2 shared block)
+        dq, dk, dv = qkv_delta
+    q = (cm.dense(p["wq"], x) + dq).reshape(B, S, num_heads, head_dim)
+    if kv_override is None:
+        k = (cm.dense(p["wk"], x) + dk).reshape(B, S, num_kv, head_dim)
+        v = (cm.dense(p["wv"], x) + dv).reshape(B, S, num_kv, head_dim)
+    else:  # cross-attention: kv computed from encoder output elsewhere
+        k, v = kv_override
+    q, k = _qk_normed(p, q, k)
+    if use_rope:
+        q = cm.rope(q, positions, theta=rope_theta)
+        if kv_override is None:
+            k = cm.rope(k, positions, theta=rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        attn_softcap=attn_softcap, scale=scale)
+    o = constrain(o, "batch", "seq", "heads", None)
+    y = cm.dense(p["wo"], o.reshape(B, S, num_heads * head_dim))
+    cache = None
+    if cache_capacity:
+        C = min(cache_capacity, window) if window else cache_capacity
+        cache = {"k": constrain(_ring_store(k, C), "batch", "kv_seq",
+                                "kv_heads", None),
+                 "v": constrain(_ring_store(v, C), "batch", "kv_seq",
+                                "kv_heads", None)}
+    return y, cache
+
+
+def _ring_store(x: jax.Array, capacity: int) -> jax.Array:
+    """Store the last min(S, C) tokens of x (B, S, ...) into ring slots p % C."""
+    B, S = x.shape[:2]
+    n = min(S, capacity)
+    pos = jnp.arange(S - n, S)
+    last = x[:, S - n:]
+    buf = jnp.zeros((B, capacity) + x.shape[2:], jnp.bfloat16)
+    return buf.at[:, pos % capacity].set(last.astype(jnp.bfloat16))
+
+
+def ring_slot(t: jax.Array, capacity: int) -> jax.Array:
+    return jnp.mod(t, capacity)
+
+
+def ring_positions(t: jax.Array, capacity: int) -> jax.Array:
+    """Position stored in each ring slot after writing token t at t%C.
+
+    Slot j holds the latest position p <= t with p % C == j (or is empty,
+    encoded as p > t via a large value, never matches the mask).
+    """
+    j = jnp.arange(capacity)
+    p = t - jnp.mod(t - j, capacity)
+    return jnp.where(p >= 0, p, t + 1 + capacity)  # invalid -> masked out
+
+
+def decode_attend(q, cache_k, cache_v, kpos, t, *, attn_softcap=0.0,
+                  scale=None, window=0, seq_sharded: bool = False):
+    """One-token attention against a cache.
+
+    q: (B, H, D); cache_k/v: (B, C, K, D); kpos: (C,) global position of each
+    slot; t: current position (scalar).  Valid slots: kpos <= t and (window).
+    """
+    B, H, D = q.shape
+    K = cache_k.shape[2]
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, K, G, D)
+    seq_ax = "kv_seq" if seq_sharded else None
+    ck = constrain(cache_k, "batch", seq_ax, "kv_heads", None)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, ck,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = cm.softcap(s, attn_softcap)
+    ok = kpos <= t
+    if window:
+        ok &= t - kpos < window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    s = constrain(s, "batch", "kv_heads", None, seq_ax)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    cv = constrain(cache_v, "batch", seq_ax, "kv_heads", None)
+    o = jnp.einsum("bkgc,bckd->bkgd", (p / l).astype(cache_v.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def attn_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
+                      num_heads: int, num_kv: int, head_dim: int,
+                      rope_theta: float = 1e4, use_rope: bool = True,
+                      window: int = 0, attn_softcap: float = 0.0,
+                      scale: float | None = None, seq_sharded: bool = False,
+                      update_cache: bool = True, qkv_delta=None,
+                      ) -> tuple[jax.Array, PyTree]:
+    """Decode one token. x: (B, 1, d); t: scalar index of this token."""
+    B, S, _ = x.shape
+    assert S == 1
+    C = cache["k"].shape[1]
+    dq = dk = dv = 0
+    if qkv_delta is not None:
+        dq, dk, dv = qkv_delta
+    q = (cm.dense(p["wq"], x) + dq).reshape(B, 1, num_heads, head_dim)
+    k = (cm.dense(p["wk"], x) + dk).reshape(B, 1, num_kv, head_dim)
+    v = (cm.dense(p["wv"], x) + dv).reshape(B, 1, num_kv, head_dim)
+    q, k = _qk_normed(p, q, k)
+    pos = jnp.full((B, 1), t, jnp.int32)
+    if use_rope:
+        q = cm.rope(q, pos, theta=rope_theta)
+        k = cm.rope(k, pos, theta=rope_theta)
+    if update_cache:
+        slot = ring_slot(t, C)
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+        }
+    kpos = ring_positions(t, C)
+    o = decode_attend(q[:, 0], cache["k"], cache["v"], kpos, t,
+                      attn_softcap=attn_softcap, scale=scale, window=window,
+                      seq_sharded=seq_sharded)
+    y = cm.dense(p["wo"], o.reshape(B, 1, num_heads * head_dim))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(b: Builder, *, d_model: int, num_heads: int, kv_lora: int,
+             nope_dim: int = 128, rope_dim: int = 64, v_dim: int = 128) -> PyTree:
+    return {
+        "wq": cm.dense_init(b, d_model, num_heads * (nope_dim + rope_dim),
+                            ("embed", "qkv")),
+        "w_dkv": cm.dense_init(b, d_model, kv_lora + rope_dim, ("embed", None)),
+        "kv_norm": {"scale": b.param((kv_lora,), (None,), init="zeros")},
+        "w_uk": cm.dense_init(b, kv_lora, num_heads * nope_dim, (None, "qkv")),
+        "w_uv": cm.dense_init(b, kv_lora, num_heads * v_dim, (None, "qkv")),
+        "wo": cm.dense_init(b, num_heads * v_dim, d_model, ("qkv", "embed")),
+    }
+
+
+def mla_apply_full(p: PyTree, x: jax.Array, *, positions, num_heads: int,
+                   kv_lora: int, nope_dim: int = 128, rope_dim: int = 64,
+                   v_dim: int = 128, rope_theta: float = 1e4,
+                   cache_capacity: int = 0) -> tuple[jax.Array, PyTree | None]:
+    B, S, _ = x.shape
+    H = num_heads
+    q = cm.dense(p["wq"], x).reshape(B, S, H, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = cm.rope(q_rope, positions, theta=rope_theta)
+    ckr = cm.dense(p["w_dkv"], x)
+    c_kv = cm.rmsnorm(p["kv_norm"], ckr[..., :kv_lora])
+    k_rope = cm.rope(ckr[..., kv_lora:][:, :, None, :], positions,
+                     theta=rope_theta)  # (B,S,1,rope_dim) shared head
+    k_nope = cm.dense(p["w_uk"], c_kv).reshape(B, S, H, nope_dim)
+    v = cm.dense(p["w_uv"], c_kv).reshape(B, S, H, v_dim)
+    # combined head_dim attention: concat nope|rope with k_rope broadcast
+    qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kc = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_dim))],
+                         axis=-1)
+    scale = (nope_dim + rope_dim) ** -0.5
+    qc = constrain(qc, "batch", "seq", "heads", None)
+    kc = constrain(kc, "batch", "seq", "heads", None)
+    v = constrain(v, "batch", "seq", "heads", None)
+    o = flash_attention(qc, kc, v, causal=True, scale=scale)
+    y = cm.dense(p["wo"], o.reshape(B, S, H * v_dim))
+    cache = None
+    if cache_capacity:
+        cache = {"ckv": constrain(_ring_store(c_kv, cache_capacity),
+                                  "batch", "kv_seq", None),
+                 "krope": constrain(_ring_store(k_rope[:, :, 0],
+                                                cache_capacity),
+                                    "batch", "kv_seq", None)}
+    return y, cache
+
+
+def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
+                     num_heads: int, kv_lora: int, nope_dim: int = 128,
+                     rope_dim: int = 64, v_dim: int = 128,
+                     rope_theta: float = 1e4, seq_sharded: bool = False,
+                     ) -> tuple[jax.Array, PyTree]:
+    """Absorbed-matmul decode: attention runs in the compressed c-space."""
+    B, S, _ = x.shape
+    assert S == 1
+    H = num_heads
+    C = cache["ckv"].shape[1]
+    q = cm.dense(p["wq"], x).reshape(B, 1, H, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q_rope = cm.rope(q_rope, pos, theta=rope_theta)[:, 0]  # (B,H,rope)
+    ckr = cm.dense(p["w_dkv"], x)
+    c_new = cm.rmsnorm(p["kv_norm"], ckr[..., :kv_lora])
+    k_rope_new = cm.rope(ckr[..., kv_lora:][:, :, None, :], pos,
+                         theta=rope_theta)[:, 0, 0]  # (B,rope)
+    slot = ring_slot(t, C)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_new.astype(cache["ckv"].dtype), slot, axis=1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope_new[:, None].astype(cache["krope"].dtype),
+            slot, axis=1),
+    }
+    # absorb W_uk into q: q_c (B,H,r)
+    w_uk = p["w_uk"]["kernel"].astype(jnp.float32).reshape(kv_lora, H, nope_dim)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_uk)
+    seq_ax = "kv_seq" if seq_sharded else None
+    ckv = constrain(cache["ckv"], "batch", seq_ax, None)
+    krope = constrain(cache["krope"], "batch", seq_ax, None)
+    s = jnp.einsum("bhr,bcr->bhc", q_c.astype(jnp.bfloat16), ckv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bcr->bhc", q_rope.astype(jnp.bfloat16), krope,
+                       preferred_element_type=jnp.float32)
+    s = s * (nope_dim + rope_dim) ** -0.5
+    kpos = ring_positions(t, C)
+    s = jnp.where((kpos <= t)[None, None, :], s, NEG_INF)
+    s = constrain(s, "batch", "heads", seq_ax)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhc,bcr->bhr", p_attn.astype(jnp.bfloat16), ckv,
+                     preferred_element_type=jnp.float32)  # (B,H,r)
+    w_uv = p["w_uv"]["kernel"].astype(jnp.float32).reshape(kv_lora, H, v_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_c, w_uv)
+    y = cm.dense(p["wo"], o.reshape(B, 1, H * v_dim).astype(jnp.bfloat16))
+    return y, cache

@@ -1,0 +1,508 @@
+"""Per-layer-kind block builders.
+
+Every block kind exposes:
+  init(b, cfg)                          -> params
+  apply_full(cfg, p, x, ctx)            -> (x, aux, cache_entry|None)
+  init_cache(cfg, batch, capacity)      -> cache entry pytree
+  apply_decode(cfg, p, x, cache, t)     -> (x, new_cache)
+
+Kinds: attn, local, moe, mla_dense, mla_moe, mamba, mamba_shared,
+mlstm, slstm, enc, dec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import Builder
+from repro.models.mlp import mlp_apply, mlp_init
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context for full (train/prefill) passes."""
+    positions: jax.Array                 # (B, S)
+    cache_capacity: int = 0              # 0 -> no cache output
+    encoder_out: jax.Array | None = None  # whisper decoder cross-attn
+    seq_sharded_kv: bool = False
+
+
+def _norm_init(b: Builder, cfg: ModelConfig, dim: int | None = None) -> PyTree:
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return cm.layernorm_init(b, dim)
+    return cm.rmsnorm_init(b, dim)
+
+
+def _norm(cfg: ModelConfig, p: PyTree, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return cm.layernorm(p, x, eps=cfg.norm_eps)
+    return cm.rmsnorm(p, x, eps=cfg.norm_eps)
+
+
+def _attn_kwargs(cfg: ModelConfig, *, local: bool) -> dict:
+    theta = cfg.rope_theta
+    if local and cfg.local_rope_theta:
+        theta = cfg.local_rope_theta
+    return dict(
+        num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=theta, use_rope=cfg.use_rope,
+        window=cfg.sliding_window if local else 0,
+        attn_softcap=cfg.attn_softcap,
+        scale=cfg.attn_scale or None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention + (mlp | moe) blocks
+# ---------------------------------------------------------------------------
+
+def _tblock_init(b: Builder, cfg: ModelConfig, *, ffn: str) -> PyTree:
+    p = {
+        "ln1": _norm_init(b, cfg),
+        "attn": attn.attn_init(b, d_model=cfg.d_model, num_heads=cfg.num_heads,
+                               num_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                               qk_norm=cfg.qk_norm),
+        "ln2": _norm_init(b, cfg),
+    }
+    if ffn == "moe":
+        p["moe"] = moe_mod.moe_init(
+            b, d_model=cfg.d_model, d_ff=cfg.moe_d_ff or cfg.d_ff,
+            num_experts=cfg.num_experts, num_shared=cfg.num_shared_experts,
+            expert_sharded=cfg.num_experts % 16 == 0)
+    else:
+        p["mlp"] = mlp_init(b, cfg.d_model, cfg.d_ff)
+    if cfg.sandwich_norm:
+        p["post_ln1"] = _norm_init(b, cfg)
+        p["post_ln2"] = _norm_init(b, cfg)
+    return p
+
+
+def _ffn_apply(cfg: ModelConfig, p: PyTree, x: jax.Array):
+    if "moe" in p:
+        y, aux = moe_mod.moe_apply(
+            p["moe"], x, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            act=cfg.act, expert_sharded=cfg.num_experts % 16 == 0)
+        return y, aux
+    return mlp_apply(p["mlp"], x, act=cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _tblock_apply_full(cfg: ModelConfig, p: PyTree, x: jax.Array, ctx: Ctx, *,
+                       local: bool, causal: bool = True):
+    from repro.dist.axes import constrain
+    kw = _attn_kwargs(cfg, local=local)
+    a, cache = attn.attn_apply_full(
+        p["attn"], _norm(cfg, p["ln1"], x), positions=ctx.positions,
+        causal=causal, cache_capacity=ctx.cache_capacity, **kw)
+    if cfg.sandwich_norm:
+        a = _norm(cfg, p["post_ln1"], a)
+    # Megatron SP: constrain block outputs back to the seq-sharded layout so
+    # the TP partial-sum lowers to a reduce-scatter, not a full all-reduce.
+    a = constrain(a, "batch", "act_seq", None)
+    x = x + a
+    f, aux = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    if cfg.sandwich_norm:
+        f = _norm(cfg, p["post_ln2"], f)
+    f = constrain(f, "batch", "act_seq", None)
+    return x + f, aux, cache
+
+
+def _tblock_cache(cfg: ModelConfig, batch: int, capacity: int, *, local: bool):
+    C = min(capacity, cfg.sliding_window) if (local and cfg.sliding_window) \
+        else capacity
+    return attn.make_kv_cache(batch, C, cfg.num_kv_heads, cfg.head_dim)
+
+
+def _tblock_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                         local: bool, seq_sharded: bool = False):
+    kw = _attn_kwargs(cfg, local=local)
+    a, cache = attn.attn_apply_decode(
+        p["attn"], _norm(cfg, p["ln1"], x), cache, t,
+        seq_sharded=seq_sharded, **kw)
+    if cfg.sandwich_norm:
+        a = _norm(cfg, p["post_ln1"], a)
+    x = x + a
+    f, _ = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    if cfg.sandwich_norm:
+        f = _norm(cfg, p["post_ln2"], f)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA blocks (deepseek)
+# ---------------------------------------------------------------------------
+
+def _mla_kwargs(cfg: ModelConfig) -> dict:
+    return dict(num_heads=cfg.num_heads, kv_lora=cfg.kv_lora,
+                nope_dim=cfg.qk_nope_dim, rope_dim=cfg.qk_rope_dim,
+                v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
+
+
+def _mla_block_init(b: Builder, cfg: ModelConfig, *, ffn: str) -> PyTree:
+    p = {
+        "ln1": _norm_init(b, cfg),
+        "attn": attn.mla_init(b, d_model=cfg.d_model, num_heads=cfg.num_heads,
+                              kv_lora=cfg.kv_lora, nope_dim=cfg.qk_nope_dim,
+                              rope_dim=cfg.qk_rope_dim, v_dim=cfg.v_head_dim),
+        "ln2": _norm_init(b, cfg),
+    }
+    if ffn == "moe":
+        p["moe"] = moe_mod.moe_init(
+            b, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
+            num_experts=cfg.num_experts, num_shared=cfg.num_shared_experts,
+            expert_sharded=cfg.num_experts % 16 == 0)
+    else:
+        p["mlp"] = mlp_init(b, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _mla_apply_full(cfg: ModelConfig, p: PyTree, x, ctx: Ctx):
+    a, cache = attn.mla_apply_full(
+        p["attn"], _norm(cfg, p["ln1"], x), positions=ctx.positions,
+        cache_capacity=ctx.cache_capacity, **_mla_kwargs(cfg))
+    x = x + a
+    f, aux = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    return x + f, aux, cache
+
+
+def _mla_cache(cfg: ModelConfig, batch: int, capacity: int):
+    return {"ckv": jnp.zeros((batch, capacity, cfg.kv_lora), jnp.bfloat16),
+            "krope": jnp.zeros((batch, capacity, cfg.qk_rope_dim), jnp.bfloat16)}
+
+
+def _mla_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                      seq_sharded: bool = False):
+    a, cache = attn.mla_apply_decode(
+        p["attn"], _norm(cfg, p["ln1"], x), cache, t,
+        seq_sharded=seq_sharded, **_mla_kwargs(cfg))
+    x = x + a
+    f, _ = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# mamba blocks (+ zamba-style shared attention with per-invocation LoRA)
+# ---------------------------------------------------------------------------
+
+def _mamba_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    return {
+        "ln": _norm_init(b, cfg),
+        "mamba": ssm_mod.mamba2_init(b, d_model=cfg.d_model,
+                                     d_inner=cfg.d_inner,
+                                     d_state=cfg.ssm_state,
+                                     head_dim=cfg.ssm_head_dim),
+    }
+
+
+def _lora_init(b: Builder, d_in: int, d_out: int, rank: int) -> PyTree:
+    return {"a": b.param((d_in, rank), ("embed", "lora"), scale=d_in ** -0.5),
+            "b": b.param((rank, d_out), ("lora", "qkv"), init="zeros")}
+
+
+def _lora_apply(p: PyTree, x: jax.Array) -> jax.Array:
+    return (x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+
+
+def shared_block_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    """The weight-shared attention+MLP block (one copy per model)."""
+    return {
+        "ln1": _norm_init(b, cfg),
+        "attn": attn.attn_init(b, d_model=cfg.d_model, num_heads=cfg.num_heads,
+                               num_kv=cfg.num_kv_heads, head_dim=cfg.head_dim),
+        "ln2": _norm_init(b, cfg),
+        "mlp": mlp_init(b, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _mamba_shared_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    p = _mamba_init(b, cfg)
+    r = cfg.lora_rank or 32
+    H = cfg.num_heads * cfg.head_dim
+    p["lora_q"] = _lora_init(b, cfg.d_model, H, r)
+    p["lora_k"] = _lora_init(b, cfg.d_model, cfg.num_kv_heads * cfg.head_dim, r)
+    p["lora_v"] = _lora_init(b, cfg.d_model, cfg.num_kv_heads * cfg.head_dim, r)
+    return p
+
+
+def _shared_attn_qkv_delta(p: PyTree, h: jax.Array):
+    return (_lora_apply(p["lora_q"], h), _lora_apply(p["lora_k"], h),
+            _lora_apply(p["lora_v"], h))
+
+
+def _mamba_apply_full(cfg: ModelConfig, p: PyTree, x, ctx: Ctx, *,
+                      shared: PyTree | None = None):
+    y, state = ssm_mod.mamba2_apply_full(
+        p["mamba"], _norm(cfg, p["ln"], x), d_inner=cfg.d_inner,
+        d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+        return_state=ctx.cache_capacity > 0)
+    x = x + y
+    cache = {"mamba": state} if state is not None else None
+    if shared is not None:
+        h = _norm(cfg, shared["ln1"], x)
+        B, S, _ = h.shape
+        kw = _attn_kwargs(cfg, local=False)
+        # LoRA deltas folded into q/k/v for this invocation
+        dq, dk, dv = _shared_attn_qkv_delta(p, h)
+        a, kvc = attn.attn_apply_full(
+            shared["attn"], h, positions=ctx.positions,
+            cache_capacity=ctx.cache_capacity,
+            qkv_delta=(dq, dk, dv), **kw)
+        x = x + a
+        f = mlp_apply(shared["mlp"], _norm(cfg, shared["ln2"], x), act=cfg.act)
+        x = x + f
+        if cache is not None:
+            cache["kv"] = kvc
+    return x, jnp.zeros((), jnp.float32), cache
+
+
+def _mamba_cache(cfg: ModelConfig, batch: int, capacity: int, *, shared: bool):
+    c = {"mamba": ssm_mod.mamba2_init_state(
+        batch, d_inner=cfg.d_inner, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim)}
+    if shared:
+        c["kv"] = attn.make_kv_cache(batch, capacity, cfg.num_kv_heads,
+                                     cfg.head_dim)
+    return c
+
+
+def _mamba_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                        shared: PyTree | None = None,
+                        seq_sharded: bool = False):
+    y, st = ssm_mod.mamba2_apply_decode(
+        p["mamba"], _norm(cfg, p["ln"], x), cache["mamba"],
+        d_inner=cfg.d_inner, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+    x = x + y
+    new_cache = {"mamba": st}
+    if shared is not None:
+        h = _norm(cfg, shared["ln1"], x)
+        kw = _attn_kwargs(cfg, local=False)
+        dq, dk, dv = _shared_attn_qkv_delta(p, h)
+        a, kvc = attn.attn_apply_decode(
+            shared["attn"], h, cache["kv"], t, seq_sharded=seq_sharded,
+            qkv_delta=(dq, dk, dv), **kw)
+        x = x + a
+        x = x + mlp_apply(shared["mlp"], _norm(cfg, shared["ln2"], x),
+                          act=cfg.act)
+        new_cache["kv"] = kvc
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def _mlstm_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    return {"ln": _norm_init(b, cfg),
+            "mlstm": xlstm_mod.mlstm_init(b, d_model=cfg.d_model,
+                                          num_heads=cfg.lstm_heads,
+                                          proj_factor=cfg.lstm_proj_factor)}
+
+
+def _slstm_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    return {"ln": _norm_init(b, cfg),
+            "slstm": xlstm_mod.slstm_init(b, d_model=cfg.d_model,
+                                          num_heads=cfg.lstm_heads)}
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder/decoder blocks
+# ---------------------------------------------------------------------------
+
+def _enc_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    return _tblock_init(b, cfg, ffn="mlp")
+
+
+def _dec_init(b: Builder, cfg: ModelConfig) -> PyTree:
+    p = _tblock_init(b, cfg, ffn="mlp")
+    p["ln_cross"] = _norm_init(b, cfg)
+    p["cross"] = attn.attn_init(b, d_model=cfg.d_model,
+                                num_heads=cfg.num_heads,
+                                num_kv=cfg.num_kv_heads,
+                                head_dim=cfg.head_dim)
+    return p
+
+
+def _dec_apply_full(cfg: ModelConfig, p: PyTree, x, ctx: Ctx):
+    kw = _attn_kwargs(cfg, local=False)
+    a, cache = attn.attn_apply_full(
+        p["attn"], _norm(cfg, p["ln1"], x), positions=ctx.positions,
+        causal=True, cache_capacity=ctx.cache_capacity, **kw)
+    x = x + a
+    # cross attention over encoder output
+    h = _norm(cfg, p["ln_cross"], x)
+    enc = ctx.encoder_out
+    B, Se, _ = enc.shape
+    k = cm.dense(p["cross"]["wk"], enc).reshape(B, Se, cfg.num_kv_heads,
+                                                cfg.head_dim)
+    v = cm.dense(p["cross"]["wv"], enc).reshape(B, Se, cfg.num_kv_heads,
+                                                cfg.head_dim)
+    kwx = dict(kw)
+    kwx["use_rope"] = False
+    c, _ = attn.attn_apply_full(p["cross"], h, positions=ctx.positions,
+                                causal=False, kv_override=(k, v), **kwx)
+    x = x + c
+    f = mlp_apply(p["mlp"], _norm(cfg, p["ln2"], x), act=cfg.act)
+    if cache is not None:
+        from repro.dist.axes import constrain
+        cache = {"kv": cache,
+                 "cross_k": constrain(k.astype(jnp.bfloat16), "batch",
+                                      "kv_seq", "kv_heads", None),
+                 "cross_v": constrain(v.astype(jnp.bfloat16), "batch",
+                                      "kv_seq", "kv_heads", None)}
+    return x + f, jnp.zeros((), jnp.float32), cache
+
+
+def _dec_cache(cfg: ModelConfig, batch: int, capacity: int, enc_len: int):
+    return {"kv": attn.make_kv_cache(batch, capacity, cfg.num_kv_heads,
+                                     cfg.head_dim),
+            "cross_k": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim), jnp.bfloat16),
+            "cross_v": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                  cfg.head_dim), jnp.bfloat16)}
+
+
+def _dec_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                      seq_sharded: bool = False):
+    kw = _attn_kwargs(cfg, local=False)
+    a, kvc = attn.attn_apply_decode(p["attn"], _norm(cfg, p["ln1"], x),
+                                    cache["kv"], t, seq_sharded=seq_sharded,
+                                    **kw)
+    x = x + a
+    h = _norm(cfg, p["ln_cross"], x)
+    B = x.shape[0]
+    q = cm.dense(p["cross"]["wq"], h).reshape(B, cfg.num_heads, cfg.head_dim)
+    Se = cache["cross_k"].shape[1]
+    o = attn.decode_attend(q, cache["cross_k"], cache["cross_v"],
+                           jnp.arange(Se), jnp.asarray(Se, jnp.int32),
+                           seq_sharded=seq_sharded)
+    c = cm.dense(p["cross"]["wo"], o.reshape(B, 1, cfg.num_heads * cfg.head_dim))
+    x = x + c
+    f = mlp_apply(p["mlp"], _norm(cfg, p["ln2"], x), act=cfg.act)
+    new_cache = {"kv": kvc, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def block_init(kind: str, b: Builder, cfg: ModelConfig) -> PyTree:
+    if kind in ("attn", "enc"):
+        return _tblock_init(b, cfg, ffn="mlp")
+    if kind == "local":
+        return _tblock_init(b, cfg, ffn="mlp")
+    if kind in ("moe", "moe_local"):
+        return _tblock_init(b, cfg, ffn="moe")
+    if kind == "mla_dense":
+        return _mla_block_init(b, cfg, ffn="mlp")
+    if kind == "mla_moe":
+        return _mla_block_init(b, cfg, ffn="moe")
+    if kind == "mamba":
+        return _mamba_init(b, cfg)
+    if kind == "mamba_shared":
+        return _mamba_shared_init(b, cfg)
+    if kind == "mlstm":
+        return _mlstm_init(b, cfg)
+    if kind == "slstm":
+        return _slstm_init(b, cfg)
+    if kind == "dec":
+        return _dec_init(b, cfg)
+    raise ValueError(kind)
+
+
+def block_apply_full(kind: str, cfg: ModelConfig, p: PyTree, x: jax.Array,
+                     ctx: Ctx, shared: PyTree | None = None):
+    if kind == "attn":
+        return _tblock_apply_full(cfg, p, x, ctx, local=False)
+    if kind in ("local", "moe_local"):
+        return _tblock_apply_full(cfg, p, x, ctx, local=True)
+    if kind == "moe":
+        return _tblock_apply_full(cfg, p, x, ctx, local=False)
+    if kind in ("mla_dense", "mla_moe"):
+        return _mla_apply_full(cfg, p, x, ctx)
+    if kind == "mamba":
+        return _mamba_apply_full(cfg, p, x, ctx)
+    if kind == "mamba_shared":
+        return _mamba_apply_full(cfg, p, x, ctx, shared=shared)
+    if kind == "mlstm":
+        y, st = xlstm_mod.mlstm_apply_full(
+            p["mlstm"], _norm(cfg, p["ln"], x), num_heads=cfg.lstm_heads,
+            return_state=ctx.cache_capacity > 0)
+        return x + y, jnp.zeros((), jnp.float32), st
+    if kind == "slstm":
+        y, st = xlstm_mod.slstm_apply(
+            p["slstm"], _norm(cfg, p["ln"], x), None, num_heads=cfg.lstm_heads,
+            return_state=ctx.cache_capacity > 0)
+        return x + y, jnp.zeros((), jnp.float32), st
+    if kind == "enc":
+        return _tblock_apply_full(cfg, p, x, ctx, local=False, causal=False)
+    if kind == "dec":
+        return _dec_apply_full(cfg, p, x, ctx)
+    raise ValueError(kind)
+
+
+def block_init_cache(kind: str, cfg: ModelConfig, batch: int, capacity: int,
+                     enc_len: int = 0):
+    if kind in ("attn", "moe"):
+        return _tblock_cache(cfg, batch, capacity, local=False)
+    if kind in ("local", "moe_local"):
+        return _tblock_cache(cfg, batch, capacity, local=True)
+    if kind in ("mla_dense", "mla_moe"):
+        return _mla_cache(cfg, batch, capacity)
+    if kind == "mamba":
+        return _mamba_cache(cfg, batch, capacity, shared=False)
+    if kind == "mamba_shared":
+        return _mamba_cache(cfg, batch, capacity, shared=True)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init_state(batch, d_inner=int(
+            cfg.d_model * cfg.lstm_proj_factor), num_heads=cfg.lstm_heads)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init_state(batch, d_model=cfg.d_model,
+                                          num_heads=cfg.lstm_heads)
+    if kind == "dec":
+        return _dec_cache(cfg, batch, capacity, enc_len)
+    raise ValueError(kind)
+
+
+def block_apply_decode(kind: str, cfg: ModelConfig, p: PyTree, x: jax.Array,
+                       cache: PyTree, t: jax.Array,
+                       shared: PyTree | None = None,
+                       seq_sharded: bool = False):
+    if kind in ("attn", "moe"):
+        return _tblock_apply_decode(cfg, p, x, cache, t, local=False,
+                                    seq_sharded=seq_sharded)
+    if kind in ("local", "moe_local"):
+        return _tblock_apply_decode(cfg, p, x, cache, t, local=True,
+                                    seq_sharded=seq_sharded)
+    if kind in ("mla_dense", "mla_moe"):
+        return _mla_apply_decode(cfg, p, x, cache, t, seq_sharded=seq_sharded)
+    if kind == "mamba":
+        return _mamba_apply_decode(cfg, p, x, cache, t)
+    if kind == "mamba_shared":
+        return _mamba_apply_decode(cfg, p, x, cache, t, shared=shared,
+                                   seq_sharded=seq_sharded)
+    if kind == "mlstm":
+        y, st = xlstm_mod.mlstm_apply_decode(
+            p["mlstm"], _norm(cfg, p["ln"], x), cache,
+            num_heads=cfg.lstm_heads)
+        return x + y, st
+    if kind == "slstm":
+        y, st = xlstm_mod.slstm_apply(
+            p["slstm"], _norm(cfg, p["ln"], x), cache,
+            num_heads=cfg.lstm_heads, return_state=True)
+        return x + y, st
+    if kind == "dec":
+        return _dec_apply_decode(cfg, p, x, cache, t, seq_sharded=seq_sharded)
+    raise ValueError(kind)

@@ -1,0 +1,45 @@
+"""Feed-forward blocks: SwiGLU / GeLU MLPs."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axes import constrain
+from repro.models import common as cm
+from repro.models.common import Builder
+
+PyTree = Any
+
+
+def mlp_init(b: Builder, d_model: int, d_ff: int, *, gated: bool = True) -> PyTree:
+    p = {
+        "up": cm.dense_init(b, d_model, d_ff, ("embed", "mlp")),
+        "down": cm.dense_init(b, d_ff, d_model, ("mlp", "embed")),
+    }
+    if gated:
+        p["gate"] = cm.dense_init(b, d_model, d_ff, ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p: PyTree, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    h = cm.dense(p["up"], x)
+    if "gate" in p:
+        g = cm.dense(p["gate"], x)
+        g = _act(g, act)
+        h = g * h
+    else:
+        h = _act(h, act)
+    h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
+    return cm.dense(p["down"], h)
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)

@@ -1,0 +1,256 @@
+"""Top-level language model: stage-compressed layer stacks under ``lax.scan``.
+
+The layer stack is partitioned into *stages*: (pattern, repeats) pairs where
+``pattern`` is a tuple of block kinds applied sequentially inside one scan
+step and ``repeats`` is the scan length.  Per-layer parameters are stacked on
+a leading "layers" axis, so the lowered HLO contains each distinct block kind
+exactly once regardless of depth - essential for fast 512-device AOT compiles.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.axes import constrain
+from repro.models import blocks as blk
+from repro.models import common as cm
+from repro.models.blocks import Ctx
+from repro.models.common import Builder
+
+PyTree = Any
+
+
+def make_stages(cfg: ModelConfig, num_layers: int | None = None,
+                pattern: tuple[str, ...] | None = None):
+    """Compress the layer-kind sequence into (pattern, repeats) stages."""
+    L = num_layers if num_layers is not None else cfg.num_layers
+    pat = pattern if pattern is not None else cfg.pattern
+    stages = []
+    if pattern is None and cfg.pattern_prefix:
+        stages.append((tuple(cfg.pattern_prefix), 1))
+        L -= len(cfg.pattern_prefix)
+    p = len(pat)
+    if L // p:
+        stages.append((tuple(pat), L // p))
+    if L % p:
+        stages.append((tuple(pat[:L % p]), 1))
+    return stages
+
+
+def _stage_init(b: Builder, cfg: ModelConfig, pattern, repeats) -> PyTree:
+    if b.mode == "axes":
+        single = {str(j): blk.block_init(k, Builder("axes"), cfg)
+                  for j, k in enumerate(pattern)}
+        return jax.tree.map(lambda s: "layers|" + s, single)
+    key = b._next_key()
+
+    def one(k):
+        bb = Builder("init", k)
+        return {str(j): blk.block_init(kind, bb.child(), cfg)
+                for j, kind in enumerate(pattern)}
+
+    return jax.vmap(one)(jax.random.split(key, repeats))
+
+
+def _build(cfg: ModelConfig, b: Builder) -> PyTree:
+    p: dict[str, Any] = {"embed": cm.embed_init(b, cfg.vocab_size, cfg.d_model)}
+    if cfg.vit_dim:
+        p["vit_proj"] = cm.dense_init(b, cfg.vit_dim, cfg.d_model,
+                                      (None, "embed"))
+    if cfg.is_encoder_decoder:
+        p["frame_proj"] = cm.dense_init(b, cfg.d_model, cfg.d_model,
+                                        ("embed", "embed"))
+        p["pos_embed"] = b.param((32768, cfg.d_model), (None, "embed"),
+                                 scale=0.02)
+        p["enc_stages"] = [
+            _stage_init(b, cfg, pat, rep)
+            for pat, rep in make_stages(cfg, cfg.encoder_layers, ("enc",))]
+        p["enc_norm"] = blk._norm_init(b, cfg)
+    p["stages"] = [_stage_init(b, cfg, pat, rep)
+                   for pat, rep in make_stages(cfg)]
+    if "mamba_shared" in cfg.layer_kinds:
+        p["shared"] = blk.shared_block_init(b, cfg)
+    p["final_norm"] = blk._norm_init(b, cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = cm.dense_init(b, cfg.d_model, cfg.vocab_size,
+                                     ("embed", "vocab"))
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    return _build(cfg, Builder("init", key))
+
+
+def param_axes(cfg: ModelConfig) -> PyTree:
+    """Pytree (same structure as params) of '|'-joined logical axis strings."""
+    return _build(cfg, Builder("axes"))
+
+
+def param_shapes(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: PyTree, batch: dict) -> jax.Array:
+    x = cm.embed_lookup(params["embed"], batch["tokens"])
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.vit_dim and "patches" in batch:
+        img = cm.dense(params["vit_proj"],
+                       batch["patches"].astype(cm.COMPUTE_DTYPE))
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _run_encoder(cfg: ModelConfig, params: PyTree, frames: jax.Array, *,
+                 unroll: bool = False):
+    x = cm.dense(params["frame_proj"], frames.astype(cm.COMPUTE_DTYPE))
+    pe = cm.sinusoidal_positions(x.shape[1], cfg.d_model)
+    x = x + jnp.asarray(pe, x.dtype)
+    B, S, _ = x.shape
+    ctx = Ctx(positions=jnp.broadcast_to(jnp.arange(S), (B, S)))
+    for s, (spec, sp) in enumerate(zip(
+            make_stages(cfg, cfg.encoder_layers, ("enc",)),
+            params["enc_stages"])):
+        x, _, _ = _stage_apply_full(
+            cfg, spec, sp, x, ctx, None, remat=False,
+            unroll=f"['enc_stages'][{s}]" if unroll else False)
+    return blk._norm(cfg, params["enc_norm"], x)
+
+
+def _stage_apply_full(cfg, spec, stage_params, x, ctx: Ctx, shared,
+                      *, remat: bool, unroll: bool = False):
+    pattern, repeats = spec
+
+    def body(h, layer_p):
+        aux = jnp.zeros((), jnp.float32)
+        cache_out = {}
+        h = constrain(h, "batch", "act_seq", None)
+        for j, kind in enumerate(pattern):
+            h, aux_j, c = blk.block_apply_full(kind, cfg, layer_p[str(j)], h,
+                                               ctx, shared=shared)
+            aux = aux + aux_j
+            cache_out[str(j)] = c
+        return h, (aux, cache_out)
+
+    if unroll:  # eager per-layer execution (stats-tape calibration pass)
+        from repro.core import tape as _tape
+        t = _tape.current_tape()
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = None
+        for i in range(repeats):
+            layer_p = jax.tree.map(lambda a: a[i], stage_params)
+            if t is not None and unroll is not True:  # unroll = path prefix
+                t.register_layer(layer_p, unroll, i)
+            x, (aux, _) = body(x, layer_p)
+            aux_total += aux
+        return x, aux_total, caches
+    f = jax.checkpoint(body) if remat else body
+    x, (auxs, caches) = jax.lax.scan(f, x, stage_params)
+    return x, jnp.sum(auxs), caches
+
+
+def forward(cfg: ModelConfig, params: PyTree, batch: dict, *,
+            remat: bool = False, cache_capacity: int = 0,
+            unroll: bool = False):
+    """Full forward. Returns (logits fp32, aux, caches)."""
+    if unroll:
+        from repro.core import tape as _tape
+        t = _tape.current_tape()
+        if t is not None:  # unstacked leaves (embed, shared block, ...)
+            t.register_layer(params, "", -1)
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"], unroll=unroll)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ctx = Ctx(positions=pos, cache_capacity=cache_capacity,
+              encoder_out=enc_out)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    shared = params.get("shared")
+    for s, (spec, sp) in enumerate(zip(make_stages(cfg), params["stages"])):
+        x, aux, cache = _stage_apply_full(
+            cfg, spec, sp, x, ctx, shared,
+            remat=remat and not cache_capacity,
+            unroll=f"['stages'][{s}]" if unroll else False)
+        aux_total += aux
+        caches.append(cache)
+    x = blk._norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, aux_total, caches
+
+
+def _unembed(cfg: ModelConfig, params: PyTree, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = cm.unembed(params["embed"], x)
+    else:
+        logits = cm.dense(params["lm_head"], x).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cm.softcap(logits, cfg.final_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int,
+                enc_len: int = 0) -> list:
+    caches = []
+    for pattern, repeats in make_stages(cfg):
+        single = {str(j): blk.block_init_cache(k, cfg, batch, capacity, enc_len)
+                  for j, k in enumerate(pattern)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), single))
+    return caches
+
+
+def prefill(cfg: ModelConfig, params: PyTree, batch: dict, *,
+            cache_capacity: int):
+    """Process a prompt, fill KV caches, return last-position logits."""
+    logits, _, caches = forward(cfg, params, batch,
+                                cache_capacity=cache_capacity)
+    return logits[:, -1], caches
+
+
+def decode_step(cfg: ModelConfig, params: PyTree, token: jax.Array,
+                caches: list, t: jax.Array, *, seq_sharded: bool = False):
+    """One decode step. token: (B,) int32; t: scalar position index."""
+    batch = {"tokens": token[:, None]}
+    x = cm.embed_lookup(params["embed"], batch["tokens"])
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.is_encoder_decoder:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], t, 1, axis=0).astype(x.dtype)[None]
+    shared = params.get("shared")
+    new_caches = []
+    for (pattern, repeats), sp, cache in zip(make_stages(cfg),
+                                             params["stages"], caches):
+        def body(h, xs):
+            layer_p, layer_c = xs
+            nc = {}
+            for j, kind in enumerate(pattern):
+                h, c = blk.block_apply_decode(
+                    kind, cfg, layer_p[str(j)], h, layer_c[str(j)], t,
+                    shared=shared, seq_sharded=seq_sharded)
+                nc[str(j)] = c
+            return h, nc
+
+        x, nc = jax.lax.scan(body, x, (sp, cache))
+        new_caches.append(nc)
+    x = blk._norm(cfg, params["final_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], new_caches

@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD) block: chunked-parallel training form + O(1) decode step.
+
+Chunked SSD (Dao & Gu, arXiv:2405.21060): within a chunk the output is a
+masked quadratic form (attention-like, cost S*L per token); across chunks a
+short scan propagates the (heads, head_dim, state) SSM state.  This keeps the
+largest intermediate at (B, n_chunks, L, L) instead of (B, S, heads, hd, ds).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.axes import constrain
+from repro.models import common as cm
+from repro.models.common import Builder
+
+PyTree = Any
+
+
+def mamba2_init(b: Builder, *, d_model: int, d_inner: int, d_state: int,
+                head_dim: int = 64, conv_width: int = 4) -> PyTree:
+    nh = d_inner // head_dim
+    conv_ch = d_inner + 2 * d_state
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (ds), C (ds), dt (nh)]
+        "in_proj": cm.dense_init(b, d_model, 2 * d_inner + 2 * d_state + nh,
+                                 ("embed", "ssm")),
+        "conv": {"kernel": b.param((conv_width, conv_ch), (None, "ssm"),
+                                   scale=conv_width ** -0.5),
+                 "bias": b.param((conv_ch,), ("ssm",), init="zeros")},
+        "A_log": b.param((nh,), (None,), init="uniform", scale=1.0),
+        "dt_bias": b.param((nh,), (None,), init="zeros"),
+        "D": b.param((nh,), (None,), init="ones"),
+        "norm": {"scale": b.param((d_inner,), ("ssm",), init="zeros")},
+        "out_proj": cm.dense_init(b, d_inner, d_model, ("ssm", "embed")),
+    }
+
+
+def _split(p, x, d_inner, d_state, nh):
+    zxbcdt = cm.dense(p["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner:2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner:2 * d_inner + d_state]
+    Cm = zxbcdt[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    return z, xin, Bm, Cm, dt
+
+
+def _conv_full(p, u):
+    """Causal conv1d over sequence. u: (B, S, C)."""
+    w = p["conv"]["kernel"].astype(u.dtype)  # (W, C)
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + p["conv"]["bias"].astype(u.dtype))
+
+
+def _gated_out(p, y, z, d_inner):
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return cm.dense(p["out_proj"], y)
+
+
+def mamba2_apply_full(p: PyTree, x: jax.Array, *, d_inner: int, d_state: int,
+                      head_dim: int = 64, chunk: int = 256,
+                      return_state: bool = False,
+                      ) -> tuple[jax.Array, PyTree | None]:
+    B, S_real, _ = x.shape
+    nh = d_inner // head_dim
+    z, xin, Bm, Cm, dt = _split(p, x, d_inner, d_state, nh)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _conv_full(p, conv_in)
+    xin = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner:d_inner + d_state]
+    Cm = conv_out[..., d_inner + d_state:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    dt = jnp.clip(dt, 1e-4, 10.0)
+
+    # pad to a chunk multiple with dt=0 steps (a=1, zero input: state no-op)
+    chunk = min(chunk, S_real)
+    S = -(-S_real // chunk) * chunk
+    if S != S_real:
+        pad = ((0, 0), (0, S - S_real), (0, 0))
+        xin, Bm, Cm = jnp.pad(xin, pad), jnp.pad(Bm, pad), jnp.pad(Cm, pad)
+        dt = jnp.pad(dt, pad)  # dt=0 on padded steps
+    nc = S // chunk
+    xh = xin.reshape(B, nc, chunk, nh, head_dim).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, chunk, d_state).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, chunk, d_state).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, chunk, nh)
+
+    loga = dtc * A  # (B,nc,L,nh) log decay per step
+    cum = jnp.cumsum(loga, axis=2)  # l_t inclusive
+    # intra-chunk: y[t] = sum_{i<=t} exp(l_t - l_i) dt_i (C_t.B_i) x_i
+    G = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (B,nc,L,L)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # l_t - l_i (B,nc,L,L,nh)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    M = jnp.where(causal, jnp.exp(diff), 0.0) * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", G, M, xh)
+
+    # chunk states: S_c = sum_i exp(l_last - l_i) dt_i B_i x_i^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,L,nh)
+    Sc = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_to_end * dtc, xh)
+    A_chunk = jnp.exp(cum[:, :, -1, :])  # (B,nc,nh) total chunk decay
+
+    def comb(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a2 * a1, a2[..., None, None] * s1 + s2
+
+    a_scan, s_scan = jax.lax.associative_scan(
+        comb, (A_chunk.transpose(1, 0, 2), Sc.transpose(1, 0, 2, 3, 4)))
+    # state BEFORE chunk c = scanned state of chunk c-1 (zero for c=0)
+    H_prev = jnp.concatenate(
+        [jnp.zeros_like(s_scan[:1]), s_scan[:-1]], axis=0).transpose(1, 0, 2, 3, 4)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), H_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, head_dim)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xin.reshape(B, S, nh, head_dim).astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)[:, :S_real].astype(x.dtype)
+    out = _gated_out(p, y, z, d_inner)
+
+    state = None
+    if return_state:
+        h_final = s_scan[-1]  # (B,nh,hd,ds); dt=0 padding is a state no-op
+        W = p["conv"]["kernel"].shape[0]
+        conv_cache = conv_in[:, S_real - (W - 1):S_real]
+        state = {"h": h_final, "conv": conv_cache.astype(jnp.bfloat16)}
+    return out, state
+
+
+def mamba2_init_state(batch: int, *, d_inner: int, d_state: int,
+                      head_dim: int = 64, conv_width: int = 4) -> PyTree:
+    nh = d_inner // head_dim
+    return {
+        "h": jnp.zeros((batch, nh, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * d_state),
+                          jnp.bfloat16),
+    }
+
+
+def mamba2_apply_decode(p: PyTree, x: jax.Array, state: PyTree, *,
+                        d_inner: int, d_state: int, head_dim: int = 64,
+                        ) -> tuple[jax.Array, PyTree]:
+    """x: (B, 1, d_model). O(1) recurrent update."""
+    B = x.shape[0]
+    nh = d_inner // head_dim
+    z, xin, Bm, Cm, dt = _split(p, x, d_inner, d_state, nh)
+    u = jnp.concatenate([xin, Bm, Cm], axis=-1)[:, 0]  # (B, C)
+    hist = jnp.concatenate([state["conv"].astype(u.dtype), u[:, None]], axis=1)
+    w = p["conv"]["kernel"].astype(u.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p["conv"]["bias"].astype(u.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[:, :d_inner].reshape(B, nh, head_dim).astype(jnp.float32)
+    Bv = conv_out[:, d_inner:d_inner + d_state].astype(jnp.float32)
+    Cv = conv_out[:, d_inner + d_state:].astype(jnp.float32)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    dtv = jnp.clip(dtv, 1e-4, 10.0)  # (B, nh)
+    a = jnp.exp(dtv * A)  # (B, nh)
+    h = state["h"] * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xin, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + p["D"][None, :, None] * xin
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    out = _gated_out(p, y, z, d_inner)
+    new_state = {"h": h, "conv": hist[:, 1:].astype(jnp.bfloat16)}
+    return out, new_state

@@ -1,0 +1,88 @@
+"""Gradient compression: int8 error-feedback all-reduce.
+
+DP gradient sync moves |params| fp32 bytes per step; int8 + per-tensor scale
+cuts ICI traffic ~4x.  Error feedback (Seide et al. / EF-SGD) accumulates the
+quantization residual locally so the compressed SGD direction is unbiased in
+the long run - required for convergence at int8.
+
+`compressed_allreduce` is written against an axis name for use inside
+shard_map; `simulate_workers` provides a device-free harness used by the
+tests and by benchmarks to measure the bytes saved.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(x: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array,
+                                                       jax.Array]:
+    """Quantize (x + carried error); returns (q, scale, new_err)."""
+    corrected = x + err
+    q, scale = quantize_int8(corrected)
+    new_err = corrected - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def compressed_allreduce(x: jax.Array, err: jax.Array, axis_name: str
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Mean-all-reduce of x over `axis_name` at int8 wire format.
+
+    Inside shard_map: each worker quantizes its shard with error feedback,
+    the int8 payload is all-gathered (the compressed collective), and the
+    dequantized sum is formed locally.  Returns (mean, new_err).
+    """
+    q, scale, new_err = ef_quantize(x, err)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 wire traffic
+    ss = jax.lax.all_gather(scale, axis_name)      # tiny
+    n = qs.shape[0]
+    total = jnp.sum(qs.astype(jnp.float32) *
+                    ss.reshape((n,) + (1,) * x.ndim), axis=0)
+    return total / n, new_err
+
+
+def tree_ef_init(grads: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def simulate_workers(worker_grads: list[PyTree], errs: list[PyTree]
+                     ) -> tuple[PyTree, list[PyTree]]:
+    """Device-free reference of the compressed mean-all-reduce."""
+    n = len(worker_grads)
+    qs, new_errs = [], []
+    for g, e in zip(worker_grads, errs):
+        flat_q = jax.tree.map(
+            lambda x, er: ef_quantize(x.astype(jnp.float32), er), g, e)
+        qs.append(flat_q)
+        new_errs.append(jax.tree.map(lambda t: t[2], flat_q,
+                                     is_leaf=lambda x: isinstance(x, tuple)))
+    def combine(*per_worker):
+        acc = None
+        for (q, s, _e) in per_worker:
+            d = dequantize_int8(q, s)
+            acc = d if acc is None else acc + d
+        return acc / n
+    mean = jax.tree.map(combine, *qs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_errs
+
+
+def wire_bytes(tree: PyTree, *, compressed: bool) -> int:
+    tot = 0
+    for x in jax.tree.leaves(tree):
+        tot += x.size * (1 if compressed else 4)
+    return tot

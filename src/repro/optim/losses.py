@@ -1,0 +1,43 @@
+"""Task losses and perplexity evaluation."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def lm_loss(cfg: ModelConfig, params: Any, batch: dict, *,
+            remat: bool = False, aux_weight: float = 0.01,
+            unroll: bool = False):
+    """Next-token cross entropy. batch["tokens"]: (B, S); optional
+    batch["mask"]: (B, S) loss weights. Returns (loss, metrics)."""
+    logits, aux, _ = M.forward(cfg, params, batch, remat=remat, unroll=unroll)
+    tokens = batch["tokens"]
+    if cfg.vit_dim and "patches" in batch:  # image prefix produces no loss
+        logits = logits[:, -tokens.shape[1]:]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    w = batch.get("mask")
+    w = jnp.ones_like(nll) if w is None else w[:, 1:].astype(jnp.float32)
+    token_nll = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    loss = token_nll + aux_weight * aux
+    return loss, {"nll": token_nll, "aux": aux}
+
+
+def eval_ppl(cfg: ModelConfig, params: Any, batches: list[dict]) -> float:
+    """Perplexity over a list of batches (held-out synthetic corpus)."""
+    tot_nll = 0.0
+    tot_tok = 0
+    fn = jax.jit(lambda p, b: lm_loss(cfg, p, b)[1]["nll"])
+    for b in batches:
+        nll = fn(params, b)
+        n = b["tokens"][:, 1:].size
+        tot_nll += float(nll) * n
+        tot_tok += n
+    import math
+    return math.exp(min(tot_nll / max(tot_tok, 1), 30.0))

@@ -1,0 +1,95 @@
+"""Optimizers from scratch (no optax in the environment).
+
+AdamW with optional ZeRO-style state sharding (states inherit the FSDP
+sharding of their parameters - under pjit this IS ZeRO-3: states live
+sharded, updates are local, no gather), gradient clipping, warmup-cosine
+schedule, and SGD for the mirror-descent-style plain steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def warmup_cosine(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(math.pi * prog))
+    return cfg.lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), g
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=z(), nu=z(), count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: AdamWConfig, grads: PyTree, state: AdamWState,
+                 params: PyTree):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    lr = warmup_cosine(cfg, count)
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** c
+    bc2 = 1 - cfg.b2 ** c
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        return (p - lr * (step + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def sgd_update(lr: float, grads: PyTree, params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                        params, grads)

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches run on the single real CPU device; only
+# launch/dryrun.py (never imported here) installs fake devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,103 @@
+"""Flash attention (custom VJP) vs materialized oracle; decode paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def rand(key, shape, dtype=jnp.float32, scale=0.5):
+    return scale * jax.random.normal(jax.random.key(key), shape, dtype)
+
+
+@pytest.mark.parametrize("causal,window,softcap,kv_heads", [
+    (True, 0, 0.0, 4),
+    (True, 0, 0.0, 1),
+    (True, 16, 0.0, 2),
+    (True, 0, 30.0, 2),
+    (False, 0, 0.0, 4),
+    (True, 16, 50.0, 1),
+])
+def test_flash_vs_reference(causal, window, softcap, kv_heads):
+    B, Sq, H, D = 2, 64, 4, 16
+    q = rand(0, (B, Sq, H, D))
+    k = rand(1, (B, Sq, kv_heads, D))
+    v = rand(2, (B, Sq, kv_heads, D))
+    out = A.flash_attention(q, k, v, causal=causal, window=window,
+                            attn_softcap=softcap, q_block=16, kv_block=16)
+    ref = A.reference_attention(q, k, v, causal=causal, window=window,
+                                attn_softcap=softcap)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_gradients_match_reference():
+    B, Sq, H, D = 1, 32, 2, 8
+    q, k, v = rand(0, (B, Sq, H, D)), rand(1, (B, Sq, H, D)), \
+        rand(2, (B, Sq, H, D))
+    dout = rand(3, (B, Sq, H, D))
+
+    def f_flash(q, k, v):
+        return jnp.sum(A.flash_attention(q, k, v, causal=True, window=8,
+                                         attn_softcap=20.0, q_block=8,
+                                         kv_block=8) * dout)
+
+    def f_ref(q, k, v):
+        return jnp.sum(A.reference_attention(q, k, v, causal=True, window=8,
+                                             attn_softcap=20.0) * dout)
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+def test_flash_uneven_vdim():
+    B, Sq, H, Dq, Dv = 1, 32, 2, 16, 8
+    q = rand(0, (B, Sq, H, Dq))
+    k = rand(1, (B, Sq, H, Dq))
+    v = rand(2, (B, Sq, H, Dv))
+    out = A.flash_attention(q, k, v, causal=True, q_block=8, kv_block=8)
+    ref = A.reference_attention(q, k, v, causal=True)
+    assert out.shape == (B, Sq, H, Dv)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_ring_positions_cover_window():
+    C = 8
+    for t in [3, 7, 8, 13, 100]:
+        kpos = A.ring_positions(jnp.asarray(t), C)
+        valid = np.asarray(kpos[kpos <= t])
+        # slots hold exactly the last min(t+1, C) positions
+        want = np.arange(max(0, t - C + 1), t + 1)
+        assert sorted(valid.tolist()) == want.tolist(), (t, valid)
+
+
+def test_decode_attend_matches_reference():
+    B, H, K, D, C = 2, 4, 2, 16, 32
+    q = rand(0, (B, H, D))
+    ck = rand(1, (B, C, K, D))
+    cv = rand(2, (B, C, K, D))
+    t = jnp.asarray(C - 1, jnp.int32)
+    kpos = jnp.arange(C)
+    out = A.decode_attend(q, ck, cv, kpos, t)
+    ref = A.reference_attention(q[:, None], ck, cv, causal=True)[:, 0]
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-4)
+
+
+def test_mla_prefill_decode_roundtrip():
+    from repro.models.common import Builder
+    B, S, d, H, r = 1, 24, 32, 2, 16
+    nope, rd, vd = 16, 8, 16
+    p = A.mla_init(Builder("init", jax.random.key(0)), d_model=d, num_heads=H,
+                   kv_lora=r, nope_dim=nope, rope_dim=rd, v_dim=vd)
+    x = rand(1, (B, S, d))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kw = dict(num_heads=H, kv_lora=r, nope_dim=nope, rope_dim=rd, v_dim=vd)
+    y_full, _ = A.mla_apply_full(p, x, positions=pos, **kw)
+    _, cache = A.mla_apply_full(p, x[:, :S - 1], positions=pos[:, :S - 1],
+                                cache_capacity=S, **kw)
+    y_dec, _ = A.mla_apply_decode(p, x[:, S - 1:], cache,
+                                  jnp.asarray(S - 1, jnp.int32), **kw)
+    np.testing.assert_allclose(y_full[:, -1], y_dec[:, 0], rtol=3e-2,
+                               atol=3e-3)

@@ -1,0 +1,76 @@
+"""Sharding-rule derivation (no multi-device needed: pure spec logic)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, SHAPE_CELLS
+from repro.dist import sharding as shd
+from repro.dist.axes import ShardingRules, make_rules
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_dedupes_repeated_mesh_axes(mesh):
+    rules = ShardingRules(mesh=mesh, rules={"a": "model", "b": "model"})
+    spec = rules.spec(["a", "b"])
+    assert spec == P("model", None)
+
+
+def test_params_sharding_divisibility_fallback(mesh):
+    rules = make_rules(mesh)
+    # 3 not divisible by model axis of a >1 mesh; with size-1 axes all pass,
+    # so emulate via a fake shape check on the spec helper
+    axes = {"k": "embed|mlp"}
+    shapes = {"k": jax.ShapeDtypeStruct((6, 4), jnp.float32)}
+    out = shd.params_sharding(axes, shapes, rules)
+    assert out["k"].spec == P("data", "model")
+
+
+def test_make_rules_seq_parallel_toggle(mesh):
+    r1 = make_rules(mesh, seq_parallel=False)
+    r2 = make_rules(mesh, seq_parallel=True)
+    assert r1.rules["act_seq"] is None
+    assert r2.rules["act_seq"] == "model"
+
+
+def test_cache_sharding_layouts(mesh):
+    cs = {
+        "0": {"k": jax.ShapeDtypeStruct((4, 8, 4096, 2, 64), jnp.bfloat16),
+              "v": jax.ShapeDtypeStruct((4, 8, 4096, 2, 64), jnp.bfloat16)},
+    }
+    out = shd.cache_sharding(cs, mesh)
+    spec = out["0"]["k"].spec
+    assert spec[0] is None              # layers axis never sharded
+    assert spec[1] in ("data", ("data",))  # batch over dp
+    assert spec[2] == "model"           # capacity TP (partial softmax)
+    # long-context batch=1 -> seq sharded over every divisible axis
+    cs2 = {"0": {"k": jax.ShapeDtypeStruct((4, 1, 8192, 2, 64),
+                                           jnp.bfloat16)}}
+    out2 = shd.cache_sharding(cs2, mesh)
+    assert out2["0"]["k"].spec[2] is not None
+
+
+def test_all_full_configs_have_valid_stages():
+    from repro.models import model as M
+    for arch in ["yi-6b", "mixtral-8x22b", "zamba2-7b", "gemma3-1b",
+                 "deepseek-v2-lite-16b"]:
+        cfg = get_config(arch)
+        total = sum(len(p) * r for p, r in M.make_stages(cfg))
+        assert total == cfg.num_layers
+
+
+def test_param_axes_structure_matches_params():
+    from repro.configs.base import get_smoke_config
+    from repro.models import model as M
+    cfg = get_smoke_config("llama3.2-1b")
+    shapes = M.param_shapes(cfg)
+    axes = M.param_axes(cfg)
+    sf = jax.tree_util.tree_structure(shapes)
+    af = jax.tree_util.tree_structure(axes)
+    assert sf == af
+    for s, a in zip(jax.tree.leaves(shapes), jax.tree.leaves(axes)):
+        assert len(a.split("|")) == len(s.shape), (a, s.shape)

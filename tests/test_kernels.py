@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode) with hypothesis
+shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import prox_nm24, prox_nm24_ref
+from repro.kernels import ref
+from repro.kernels.nm_prox import nm_mask24, prox24
+from repro.kernels.nm_spmm import nm_matmul
+from repro.kernels.saliency_fuse import saliency_fused_step
+
+SHAPES = st.sampled_from([(64, 128), (128, 128), (256, 384), (64, 256)])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+@settings(max_examples=8, deadline=None)
+@given(kn=SHAPES, dtype=DTYPES, seed=st.integers(0, 10_000))
+def test_nm_matmul_matches_ref(kn, dtype, seed):
+    K, N = kn
+    M = 32
+    w = jax.random.normal(jax.random.key(seed), (K, N), jnp.float32)
+    vals, idx = ref.compress_24(w)
+    vals = vals.astype(dtype)
+    x = (0.1 * jax.random.normal(jax.random.key(seed + 1), (M, K),
+                                 jnp.float32)).astype(dtype)
+    y = nm_matmul(x, vals, idx, bm=32, bk=64, bn=128, interpret=True)
+    yr = ref.nm_matmul_ref(x, vals, idx)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(y.astype(jnp.float32),
+                               yr.astype(jnp.float32), rtol=rtol, atol=rtol)
+
+
+def test_compress_roundtrip_preserves_24_weights():
+    w = jax.random.normal(jax.random.key(0), (128, 64))
+    m = ref.nm_mask_ref(w)
+    w24 = w * m
+    vals, idx = ref.compress_24(w24)
+    np.testing.assert_allclose(ref.decompress_24(vals, idx), w24, rtol=1e-6)
+
+
+def test_compressed_bytes_ratio():
+    K, N = 1024, 1024
+    dense_bytes = K * N * 2                      # bf16
+    comp_bytes = (K // 2) * N * 2 + (K // 2) * N  # bf16 vals + int8 idx
+    assert comp_bytes / dense_bytes == 0.75
+    packed = (K // 2) * N * 2 + (K // 2) * N // 4  # 2-bit packed idx
+    assert packed / dense_bytes == 0.5625
+
+
+@settings(max_examples=6, deadline=None)
+@given(kn=SHAPES, metric=st.sampled_from(["wanda", "ria", "magnitude"]),
+       seed=st.integers(0, 1000))
+def test_saliency_fuse_matches_ref(kn, metric, seed):
+    K, N = kn
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (K, N))
+    a = jnp.abs(jax.random.normal(jax.random.key(seed + 1), (K,))) * 5
+    g = 0.1 * jax.random.normal(jax.random.key(seed + 2), (K, N))
+    v = 0.1 * jax.random.normal(jax.random.key(seed + 3), (K, N))
+    rows = jnp.sum(jnp.abs(w), 1)
+    cols = jnp.sum(jnp.abs(w), 0)
+    kw = dict(rowsum=rows, colsum=cols) if metric == "ria" else {}
+    v2, g2 = saliency_fused_step(w, a, g, v, metric=metric, interpret=True,
+                                 bk=64, bn=128, **kw)
+    if metric == "wanda":
+        vr, gr = ref.saliency_step_ref(w, a, g, v, v_lr=0.1, lam=1e-3)
+    elif metric == "magnitude":
+        vr, gr = ref.saliency_step_ref(w, jnp.ones_like(a), g, v, v_lr=0.1,
+                                       lam=1e-3)
+    else:
+        vr, gr = ref.saliency_step_ref(w, a, g, v, v_lr=0.1, lam=1e-3,
+                                       rowsum=rows[:, None],
+                                       colsum=cols[None, :])
+    np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g2, gr, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), lam=st.sampled_from([0.0, 0.01, 0.05, 0.5]))
+def test_prox24_kernel_matches_core(seed, lam):
+    w = jax.random.normal(jax.random.key(seed), (64, 128))
+    p1 = prox24(w, lam=lam, interpret=True, bk=32, bn=128)
+    p2 = prox_nm24(w, lam)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+
+
+def test_prox24_against_bruteforce_oracle():
+    w = jax.random.normal(jax.random.key(7), (16, 8))
+    np.testing.assert_allclose(prox_nm24(w, 0.05), prox_nm24_ref(w, 0.05),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), ties=st.booleans())
+def test_nm_mask24_kernel_matches_ref(seed, ties):
+    w = jax.random.normal(jax.random.key(seed), (64, 128))
+    if ties:
+        w = jnp.round(w * 2) / 2
+    m1 = nm_mask24(w, interpret=True, bk=32, bn=128)
+    m2 = ref.nm_mask_ref(w)
+    assert bool(jnp.all(m1 == m2))
+    assert bool(jnp.all(m1.reshape(16, 4, 128).sum(1) == 2))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.0, 1.0))
+def test_prox24_properties(seed, lam):
+    """Shrinkage (|out| <= |w|), sign preservation, lam=0 identity."""
+    w = jax.random.normal(jax.random.key(seed), (32, 16))
+    out = prox_nm24(w, lam)
+    assert bool(jnp.all(jnp.abs(out) <= jnp.abs(w) + 1e-6))
+    nz = jnp.abs(out) > 0
+    assert bool(jnp.all(jnp.where(nz, jnp.sign(out) == jnp.sign(w), True)))
+    if lam == 0.0:
+        np.testing.assert_allclose(out, w, rtol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       dims=st.sampled_from([(2, 2, 4, 32, 128), (1, 1, 8, 64, 256),
+                             (2, 4, 1, 32, 64)]))
+def test_flash_decode_matches_ref(seed, dims):
+    from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+    B, K, G, D, C = dims
+    q = 0.5 * jax.random.normal(jax.random.key(seed), (B, K, G, D))
+    k = 0.5 * jax.random.normal(jax.random.key(seed + 1), (B, C, K, D))
+    v = 0.5 * jax.random.normal(jax.random.key(seed + 2), (B, C, K, D))
+    valid = jax.random.randint(jax.random.key(seed + 3), (), C // 2, C + 1)
+    bias = jnp.where(jnp.arange(C)[None, :] < valid, 0.0, -1e30) * \
+        jnp.ones((B, 1))
+    y = flash_decode(q, k, v, bias, bc=32, interpret=True)
+    yr = flash_decode_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_ops_sparse_dense_roundtrip():
+    from repro.kernels import ops
+    w = jax.random.normal(jax.random.key(0), (128, 64))
+    m = ref.nm_mask_ref(w)
+    packed = ops.compress_leaf(w * m)
+    x = 0.1 * jax.random.normal(jax.random.key(1), (8, 128))
+    y = ops.sparse_dense(x, packed)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32),
+        np.asarray(x @ (w * m).astype(jnp.bfloat16), np.float32),
+        rtol=3e-2, atol=3e-3)

@@ -1,0 +1,77 @@
+"""MoE dispatch/combine invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe
+from repro.models.common import Builder
+
+
+def make(E=4, d=16, ff=32, shared=0):
+    b = Builder("init", jax.random.key(0))
+    return moe.moe_init(b, d_model=d, d_ff=ff, num_experts=E,
+                        num_shared=shared)
+
+
+def test_moe_output_shape_and_aux():
+    p = make()
+    x = 0.5 * jax.random.normal(jax.random.key(1), (2, 8, 16))
+    y, aux = moe.moe_apply(p, x, top_k=2)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # E * E[f*p] >= 1 at any routing
+
+
+def test_moe_dropless_equals_dense_mixture():
+    """With capacity >= T*k the dispatch must equal the explicit mixture."""
+    E, d, ff = 4, 16, 32
+    p = make(E, d, ff)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (1, 8, d))
+    y, _ = moe.moe_apply(p, x, top_k=2, capacity_factor=float(E))
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]["kernel"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, idx = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+
+    def expert(e, t):
+        up = xt[t] @ p["up"]["kernel"][e].astype(jnp.bfloat16)
+        g = jax.nn.silu(xt[t] @ p["gate"]["kernel"][e].astype(jnp.bfloat16))
+        return (up * g) @ p["down"]["kernel"][e].astype(jnp.bfloat16)
+
+    want = np.zeros((8, d), np.float32)
+    for t in range(8):
+        for j in range(2):
+            want[t] += float(gv[t, j]) * np.asarray(
+                expert(int(idx[t, j]), t), np.float32)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, d), np.float32),
+                               want, rtol=5e-2, atol=5e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    E, d = 4, 16
+    p = make(E, d)
+    x = 0.5 * jax.random.normal(jax.random.key(1), (1, 64, d))
+    y_small, _ = moe.moe_apply(p, x, top_k=2, capacity_factor=0.5)
+    y_big, _ = moe.moe_apply(p, x, top_k=2, capacity_factor=4.0)
+    # dropping must change some outputs (and zero at least one token's y)
+    assert not np.allclose(np.asarray(y_small), np.asarray(y_big))
+
+
+def test_moe_shared_expert_added():
+    p0 = make(shared=0)
+    p1 = make(shared=1)
+    for k in ("router", "up", "gate", "down"):
+        p1[k] = p0[k]
+    x = 0.5 * jax.random.normal(jax.random.key(1), (1, 8, 16))
+    y0, _ = moe.moe_apply(p0, x, top_k=2, capacity_factor=4.0)
+    y1, _ = moe.moe_apply(p1, x, top_k=2, capacity_factor=4.0)
+    assert not np.allclose(np.asarray(y0), np.asarray(y1))
+
+
+def test_positions_in_expert_capacity_semantics():
+    flat_e = jnp.asarray([[0, 0, 0, 1, 0, 1]])
+    e_idx, p_idx, keep, _ = moe._positions_in_expert(flat_e, E=2, C=2)
+    np.testing.assert_array_equal(np.asarray(p_idx[0]), [0, 1, 2 * 0, 0, 0, 1])
+    # third token to expert 0 dropped (pos 2 >= C)
+    np.testing.assert_array_equal(np.asarray(keep[0]),
+                                  [True, True, False, True, False, True])
