@@ -29,6 +29,9 @@ def main() -> None:
     out = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
     out.mkdir(parents=True, exist_ok=True)
     (out / "results.json").write_text(json.dumps(rows, indent=1))
+    serve_rows = [r for r in rows if r.get("table") == "serve"]
+    if serve_rows:  # sparse-serving trajectory, tracked per PR
+        table8_inference.write_serve_json(serve_rows[0])
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

@@ -12,6 +12,8 @@ a Qwen2.5-7B-like layer:
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -89,3 +91,93 @@ def run(out_rows: list) -> None:
           f"compressed-ref {tc*1e6:.0f}us")
     out_rows.append({"table": 8, "module": "cpu_wall",
                      "dense_us": td * 1e6, "comp_us": tc * 1e6})
+    serve_bench(out_rows)
+
+
+def serve_bench(out_rows: list, *, arch: str = "llama3.2-1b",
+                steps: int = 8) -> dict:
+    """End-to-end serve-path bench: dense vs bank-style 2:4-compressed decode
+    through the real model (tok/s + weight-byte ratio), tracked per PR as
+    BENCH_serve.json.  CPU numbers are functional (interpret-mode kernel),
+    the byte ratio is the TPU bandwidth story."""
+    from repro.configs.base import get_smoke_config
+    from repro.core import masks as masks_mod, metrics as metrics_mod
+    from repro.core.prunable import prunable_map
+    from repro.data.synthetic import batches_for
+    from repro.models import model as M
+    from repro.sparse import apply as apply_mod
+
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    masks = masks_mod.nm_masks(scores)
+    sparse = apply_mod.sparsify_params(params, masks, axes=M.param_axes(cfg),
+                                       idx_bits=2, dtype=jnp.bfloat16)
+    rep = apply_mod.compressed_report(sparse)
+
+    B, P = 4, 32
+    batch = {k: jnp.asarray(v) for k, v in
+             batches_for(cfg, n=1, batch=B, seq=P, split="valid")[0].items()}
+    capacity = P + steps + 1
+
+    def decode_toks_per_s(p):
+        prefill = jax.jit(lambda pp, b: M.prefill(cfg, pp, b,
+                                                  cache_capacity=capacity))
+        decode = jax.jit(lambda pp, tok, c, t: M.decode_step(cfg, pp, tok,
+                                                             c, t))
+        logits, caches = prefill(p, batch)
+        toks = jnp.argmax(logits, axis=-1)
+        toks_hist = [np.asarray(toks)]
+        decode(p, toks, caches, jnp.asarray(P, jnp.int32))  # compile
+        t0 = time.perf_counter()
+        for i in range(steps):
+            logits, caches = decode(p, toks, caches,
+                                    jnp.asarray(P + i, jnp.int32))
+            toks = jnp.argmax(logits, axis=-1)
+            toks_hist.append(np.asarray(toks))
+        jax.block_until_ready(logits)
+        return B * steps / (time.perf_counter() - t0), np.stack(toks_hist, 1)
+
+    dense_tps, dense_toks = decode_toks_per_s(params)
+    masked_tps, masked_toks = decode_toks_per_s(
+        masks_mod.apply_masks(params, masks))
+    sparse_tps, sparse_toks = decode_toks_per_s(sparse)
+    tokens_match = bool((sparse_toks == masked_toks).all())
+    result = {
+        "arch": arch, "backend": jax.default_backend(), "decode_steps": steps,
+        "batch": B, "prompt_len": P,
+        "dense_tok_s": dense_tps, "masked_tok_s": masked_tps,
+        "compressed_tok_s": sparse_tps,
+        "compressed_weight_bytes": rep["bytes_compressed"],
+        "dense_weight_bytes_bf16": rep["bytes_dense_bf16"],
+        "weight_bytes_ratio": rep["ratio"],
+        "compressed_kernels": len(rep["layers"]),
+        "tokens_match_masked_dense": tokens_match,
+    }
+    print(f"\n=== serve bench ({arch} smoke, {jax.default_backend()}) ===")
+    print(f"decode tok/s: dense {dense_tps:.1f}, masked {masked_tps:.1f}, "
+          f"2:4-compressed {sparse_tps:.1f} "
+          f"(interpret-mode kernel on non-TPU backends)")
+    print(f"pruned-layer weight bytes: {rep['bytes_compressed']} vs "
+          f"{rep['bytes_dense_bf16']} dense bf16 "
+          f"(ratio {rep['ratio']:.4f}); tokens match masked-dense: "
+          f"{tokens_match}")
+    out_rows.append({"table": "serve", **result})
+    return result
+
+
+def write_serve_json(result: dict, path=None) -> pathlib.Path:
+    out = (pathlib.Path(path) if path else
+           pathlib.Path(__file__).resolve().parent.parent / "results" /
+           "bench" / "BENCH_serve.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(result, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = serve_bench(rows)
+    print("wrote", write_serve_json(res))

@@ -1,14 +1,48 @@
-"""Batched serving of a 2:4-pruned model (paper Table 8 scenario).
+"""Mask-bank round trip: calibrate ONCE, serve sparse TWICE (paper §4.3 +
+Table 8 scenario).
 
-  PYTHONPATH=src python examples/serve_sparse.py
+Run 1 calibrates UniPruning inline and persists the post-calibration state
+(Gamma/V/stats/PruneConfig) as a mask-bank artifact.  Runs 2 and 3 never
+touch the mirror-descent search again: they load the bank, re-threshold to
+masks in one shot, and serve - first with 2:4-compressed weights executing
+through the nm_spmm kernel, then masked-dense for an A/B token check.
+
+  PYTHONPATH=src python examples/serve_sparse.py --arch llama3.2-1b
+  PYTHONPATH=src python examples/serve_sparse.py --arch gemma2-2b \
+      --sparsity 0.6 --gen 32
 """
+import argparse
 import subprocess
 import sys
 
-# The serve launcher is the real entry point; this example drives it with
-# a sparse model + batched requests.
-cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "llama3.2-1b",
-       "--smoke", "--batch", "4", "--prompt-len", "64", "--gen", "16",
-       "--sparse"]
-print("+", " ".join(cmd))
-raise SystemExit(subprocess.call(cmd))
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3.2-1b")
+ap.add_argument("--sparsity", type=float, default=None,
+                help="unstructured re-threshold budget (default: the "
+                     "calibrated 2:4 pattern)")
+ap.add_argument("--gen", type=int, default=16)
+ap.add_argument("--artifact", default=None,
+                help="bank directory (default results/bank/<arch>)")
+args = ap.parse_args()
+artifact = args.artifact or f"results/bank/{args.arch}"
+
+base = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+        "--smoke", "--batch", "4", "--prompt-len", "64",
+        "--gen", str(args.gen)]
+sparsity = (["--sparsity", str(args.sparsity)]
+            if args.sparsity is not None else [])
+
+runs = [
+    # 1: calibrate once, persist the bank
+    base + ["--sparse", "--save-artifact", artifact],
+    # 2: serve compressed from the bank - no re-calibration
+    base + ["--sparse-artifact", artifact] + sparsity,
+    # 3: same masks, masked-dense weights - tokens must match run 2
+    base + ["--sparse-artifact", artifact, "--weight-format", "masked"]
+    + sparsity,
+]
+for cmd in runs:
+    print("+", " ".join(cmd), flush=True)
+    rc = subprocess.call(cmd)
+    if rc:
+        raise SystemExit(rc)

@@ -38,6 +38,71 @@ def _flatten(tree: PyTree) -> list[tuple[str, Any]]:
     return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
 
 
+def _write_tree(tmp: pathlib.Path, final: pathlib.Path, host_tree: PyTree,
+                manifest_extra: dict) -> None:
+    """Serialize a host pytree under tmp, then atomically commit to final."""
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {**manifest_extra, "leaves": {}}
+    for i, (path, leaf) in enumerate(_flatten(host_tree)):
+        if leaf is None:
+            manifest["leaves"][path] = None
+            continue
+        fname = f"leaf_{i:06d}.npy"
+        np.save(tmp / fname, leaf)
+        manifest["leaves"][path] = {
+            "file": fname, "shape": list(np.shape(leaf)),
+            "dtype": str(np.asarray(leaf).dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():  # re-save (e.g. final + periodic, or artifact update)
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+
+
+def _read_tree(d: pathlib.Path, template: PyTree,
+               shardings: PyTree | None = None) -> tuple[PyTree, dict]:
+    """Load a pytree serialized by _write_tree into template's structure."""
+    manifest = json.loads((d / "manifest.json").read_text())
+    by_path = manifest["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: x is None)
+    sh_flat = (None if shardings is None else
+               jax.tree_util.tree_flatten(
+                   shardings, is_leaf=lambda x: x is None)[0])
+    out = []
+    for i, (kp, leaf) in enumerate(flat):
+        ent = by_path.get(jax.tree_util.keystr(kp))
+        if ent is None:
+            out.append(None)
+            continue
+        arr = np.load(d / ent["file"])
+        if sh_flat is not None and sh_flat[i] is not None:
+            arr = jax.device_put(arr, sh_flat[i])
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+# -- named artifacts (non-step state: mask banks, calibration results) -------
+
+def save_artifact(directory: str | os.PathLike, tree: PyTree, *,
+                  metadata: dict | None = None) -> None:
+    """Atomically write a pytree + metadata as a standalone artifact dir."""
+    final = pathlib.Path(directory)
+    final.parent.mkdir(parents=True, exist_ok=True)
+    host = jax.tree.map(lambda x: None if x is None else np.asarray(x),
+                        tree, is_leaf=lambda x: x is None)
+    _write_tree(final.parent / (final.name + ".tmp"), final, host,
+                {"metadata": metadata or {}})
+
+
+def load_artifact(directory: str | os.PathLike, template: PyTree
+                  ) -> tuple[PyTree, dict]:
+    """Restore an artifact into template's structure; returns (tree, meta)."""
+    tree, manifest = _read_tree(pathlib.Path(directory), template)
+    return tree, manifest["metadata"]
+
+
 class CheckpointManager:
     def __init__(self, directory: str | os.PathLike, *, keep: int = 3):
         self.dir = pathlib.Path(directory)
@@ -73,25 +138,9 @@ class CheckpointManager:
             self._pending = None
 
     def _write(self, step: int, host_state: PyTree, metadata: dict) -> None:
-        tmp = self.dir / f"step_{step:08d}.tmp"
-        final = self.dir / f"step_{step:08d}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        manifest = {"step": step, "metadata": metadata, "leaves": {}}
-        for i, (path, leaf) in enumerate(_flatten(host_state)):
-            if leaf is None:
-                manifest["leaves"][path] = None
-                continue
-            fname = f"leaf_{i:06d}.npy"
-            np.save(tmp / fname, leaf)
-            manifest["leaves"][path] = {
-                "file": fname, "shape": list(np.shape(leaf)),
-                "dtype": str(np.asarray(leaf).dtype)}
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        if final.exists():  # re-save of the same step (e.g. final + periodic)
-            shutil.rmtree(final)
-        os.replace(tmp, final)  # atomic commit
+        _write_tree(self.dir / f"step_{step:08d}.tmp",
+                    self.dir / f"step_{step:08d}", host_state,
+                    {"step": step, "metadata": metadata})
         latest_tmp = self.dir / "LATEST.tmp"
         latest_tmp.write_text(str(step))
         os.replace(latest_tmp, self.dir / "LATEST")
@@ -125,22 +174,6 @@ class CheckpointManager:
         """
         step = self.latest_step() if step is None else step
         assert step is not None, "no checkpoint found"
-        d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        by_path = manifest["leaves"]
-        flat, treedef = jax.tree_util.tree_flatten_with_path(
-            template, is_leaf=lambda x: x is None)
-        sh_flat = (None if shardings is None else
-                   jax.tree_util.tree_flatten(
-                       shardings, is_leaf=lambda x: x is None)[0])
-        out = []
-        for i, (kp, leaf) in enumerate(flat):
-            ent = by_path.get(jax.tree_util.keystr(kp))
-            if ent is None:
-                out.append(None)
-                continue
-            arr = np.load(d / ent["file"])
-            if sh_flat is not None and sh_flat[i] is not None:
-                arr = jax.device_put(arr, sh_flat[i])
-            out.append(arr)
-        return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+        tree, manifest = _read_tree(self.dir / f"step_{step:08d}", template,
+                                    shardings)
+        return tree, manifest["metadata"]

@@ -1,0 +1,123 @@
+"""Logical axis names -> mesh axes.
+
+Model code annotates every parameter and activation dimension with a
+*logical* name ("embed", "mlp", "batch", ...).  A :class:`ShardingRules`
+maps logical names onto mesh axes; :func:`constrain` applies the mapping as
+a ``with_sharding_constraint`` whenever rules are installed (``use_rules``)
+and is the identity otherwise, so the same model code runs on one CPU
+device in tests and under the production mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_local = threading.local()
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    """mesh + {logical axis name: mesh axis | tuple of mesh axes | None}."""
+    mesh: Any
+    rules: dict[str, Any]
+
+    def spec(self, names) -> P:
+        """PartitionSpec for a sequence of logical names.
+
+        A mesh axis may appear at most once in a spec; later dims that map
+        onto an already-used mesh axis fall back to None (replicated).
+        """
+        used: set[str] = set()
+        out = []
+        for name in names:
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                out.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes
+                         if a in self.mesh.axis_names and a not in used)
+            used.update(axes)
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(axes)
+        return P(*out)
+
+
+def make_rules(mesh, *, seq_parallel: bool = False,
+               seq_shard_kv: Any = False) -> ShardingRules:
+    """Default logical->mesh mapping (FSDP over 'data', TP over 'model').
+
+    seq_parallel: shard activation seq ("act_seq") over the TP axis
+    (Megatron SP).  seq_shard_kv: False | "model" | "all" - how decode KV
+    caches shard their capacity dim (see sharding.cache_sharding).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    data: Any = ("pod", "data") if multi_pod else "data"
+    if seq_shard_kv == "all":
+        kv_seq: Any = (("pod", "data", "model") if multi_pod
+                       else ("data", "model"))
+    elif seq_shard_kv:
+        kv_seq = "model"
+    else:
+        kv_seq = None
+    rules = {
+        # parameters
+        "embed": data, "mlp": "model", "qkv": "model",
+        "vocab": "model", "experts": "model", "ssm": "model",
+        "embed_act": None, "layers": None,
+        # activations
+        "batch": data, "seq": None, "heads": "model",
+        "kv_heads": "model",
+        "act_seq": "model" if seq_parallel else None,
+        "kv_seq": kv_seq,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = current_rules()
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def _divisible(shape, spec, mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        out.append(axes if dim % n == 0 else None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names) -> jax.Array:
+    """with_sharding_constraint under installed rules; identity otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = _divisible(x.shape, rules.spec(names), rules.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

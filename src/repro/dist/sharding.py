@@ -1,0 +1,107 @@
+"""Sharding derivation: params / batch / KV-cache NamedSharding trees.
+
+Specs are derived from the logical-axis annotations the model emits
+(``models.model.param_axes``) through a :class:`~repro.dist.axes.ShardingRules`
+mapping, with a per-dimension divisibility fallback (a dim that the mapped
+mesh axes do not divide is replicated instead of erroring).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.axes import ShardingRules, _divisible, make_rules
+
+PyTree = Any
+
+
+def make_production_rules(mesh, *, seq_shard_kv: Any = False,
+                          seq_parallel: bool = False) -> ShardingRules:
+    """Rules for the production mesh (pod/data FSDP + model TP)."""
+    return make_rules(mesh, seq_parallel=seq_parallel,
+                      seq_shard_kv=seq_shard_kv)
+
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _one(axes):
+    return axes[0] if isinstance(axes, tuple) and len(axes) == 1 else axes
+
+
+def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
+                    rules: ShardingRules) -> PyTree:
+    """'|'-joined logical-axis strings + shapes -> NamedSharding tree."""
+    def leaf(axes_str, shape_like):
+        if axes_str is None or shape_like is None:
+            return NamedSharding(rules.mesh, P())
+        names = axes_str.split("|")
+        spec = rules.spec(names)
+        spec = _divisible(shape_like.shape, spec, rules.mesh)
+        return NamedSharding(rules.mesh, spec)
+
+    return jax.tree.map(leaf, axes_tree, shapes_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def batch_sharding_tree(batch_tree: PyTree, mesh) -> PyTree:
+    """Input batches: leading batch dim over the data axes, rest replicated."""
+    data = _one(_data_axes(mesh))
+    dp = 1
+    for a in _data_axes(mesh):
+        dp *= mesh.shape[a]
+
+    def leaf(s):
+        if s is None:
+            return NamedSharding(mesh, P())
+        b = _one(tuple(a for a in _data_axes(mesh)))
+        spec = [b if s.shape and s.shape[0] % dp == 0 else None]
+        spec += [None] * (len(s.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, batch_tree, is_leaf=lambda x: x is None)
+
+
+def cache_sharding(cache_tree: PyTree, mesh) -> PyTree:
+    """Decode KV caches, leaves (layers, B, capacity, ...).
+
+    * layers axis: never sharded (scanned over),
+    * B > 1: batch over the data axes, capacity over "model" (decode
+      attention reduces over capacity with a partial softmax - GSPMD lowers
+      it to a tiny all-reduce, no KV all-gather),
+    * B == 1 (long-context): capacity over every divisible mesh axis.
+    """
+    data = _data_axes(mesh)
+    dp = 1
+    for a in data:
+        dp *= mesh.shape[a]
+
+    def leaf(s):
+        if s is None:
+            return NamedSharding(mesh, P())
+        shape = s.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 3:
+            B, C = shape[1], shape[2]
+            if B > 1 and B % dp == 0:
+                spec[1] = _one(data)
+                if C % mesh.shape["model"] == 0:
+                    spec[2] = "model"
+            else:
+                axes = tuple(a for a in data + ("model",)
+                             if C % mesh.shape[a] == 0)
+                # nested-tuple product divisibility
+                n = 1
+                keep = []
+                for a in axes:
+                    if C % (n * mesh.shape[a]) == 0:
+                        keep.append(a)
+                        n *= mesh.shape[a]
+                if keep:
+                    spec[2] = keep[0] if len(keep) == 1 else tuple(keep)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, cache_tree, is_leaf=lambda x: x is None)

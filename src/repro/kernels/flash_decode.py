@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed across JAX versions (TPUCompilerParams <= 0.4.x)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
                    acc_ref, *, nc, scale):
@@ -79,7 +82,7 @@ def flash_decode(q, k, v, bias, *, scale=None, bc: int = 512,
         scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
                         pltpu.VMEM((G, 1), jnp.float32),
                         pltpu.VMEM((G, Dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, bias)

@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed across JAX versions (TPUCompilerParams <= 0.4.x)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _expand_tile(vals, idx):
     """(bk/2, bn) compressed -> (bk, bn) dense, in-register.
@@ -83,7 +86,7 @@ def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, vals, idx)

@@ -1,11 +1,21 @@
 """Batched serving driver: prefill a batch of prompts, then decode tokens.
 
-Demonstrates the serving path end-to-end on host devices, optionally with
-2:4-sparse weights produced by UniPruning (--sparse), exercising the same
-prefill/decode step functions the dry-run lowers for the production mesh.
+Demonstrates the serving path end-to-end on host devices, exercising the
+same prefill/decode step functions the dry-run lowers for the production
+mesh.  Sparse serving has two modes:
+
+* ``--sparse [--save-artifact DIR]`` - calibrate UniPruning inline (2:4),
+  optionally persisting the post-calibration state as a mask-bank artifact;
+* ``--sparse-artifact DIR [--sparsity S]`` - skip calibration entirely:
+  load the bank, re-threshold to masks in one shot, and serve with
+  2:4-compressed weights executing through ``kernels.nm_spmm.nm_matmul``
+  (``--weight-format masked`` serves the same masks as masked-dense W0*M -
+  token-for-token identical, for A/B checks).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+      --sparse --save-artifact results/bank/llama --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --sparse-artifact results/bank/llama --gen 16
 """
 from __future__ import annotations
 
@@ -21,7 +31,52 @@ from repro.data.synthetic import batches_for
 from repro.models import model as M
 
 
-def main() -> None:
+def _calibrate_sparse(cfg, args, params):
+    """Inline 2:4 UniPruning; optionally persist the bank artifact."""
+    from repro.core import calibrate, mirror
+    from repro.core import masks as masks_mod
+    calib = batches_for(cfg, n=8, batch=4, seq=args.prompt_len,
+                        split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=30)
+    stats = calibrate.collect_stats(cfg, params, calib[:4])
+    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
+    if args.save_artifact:
+        from repro.sparse.bank import MaskBank
+        MaskBank.save(args.save_artifact, arch=args.arch, smoke=args.smoke,
+                      state=state, stats=stats, pcfg=pcfg)
+        print(f"saved mask bank -> {args.save_artifact}")
+    masks = mirror.export_masks(pcfg, state.Gamma, 0.5, V=state.V)
+    print("serving 2:4-pruned weights (masked-dense, inline calibration)")
+    return masks_mod.apply_masks(params, masks)
+
+
+def _load_sparse(args, params):
+    """Bank-backed sparse params: one-shot re-threshold, no calibration."""
+    from repro.sparse.bank import MaskBank
+    from repro.sparse.apply import compressed_report
+    bank = MaskBank.load(args.sparse_artifact)
+    # only the N:M pattern has a compressed execution format; an explicit
+    # unstructured --sparsity re-threshold serves masked-dense
+    compressed = (args.weight_format == "compressed"
+                  and bank.pcfg.mode == "nm" and args.sparsity is None)
+    if args.weight_format == "compressed" and not compressed:
+        print("note: unstructured budget -> masked-dense serving "
+              "(2:4-compressed execution needs the bank's N:M pattern)")
+    sparse = bank.sparse_params(params, sparsity=args.sparsity,
+                                compressed=compressed)
+    if compressed:
+        rep = compressed_report(sparse)
+        print(f"serving from bank {args.sparse_artifact}: "
+              f"{len(rep['layers'])} kernels 2:4-compressed, "
+              f"{rep['bytes_compressed'] / 1e6:.2f} MB vs "
+              f"{rep['bytes_dense_bf16'] / 1e6:.2f} MB dense bf16 "
+              f"(ratio {rep['ratio']:.3f})")
+    else:
+        print(f"serving from bank {args.sparse_artifact} (masked-dense)")
+    return bank.cfg, sparse
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -30,22 +85,27 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--sparse", action="store_true",
                     help="prune 2:4 with UniPruning before serving")
+    ap.add_argument("--save-artifact", default=None,
+                    help="with --sparse: persist the mask bank here")
+    ap.add_argument("--sparse-artifact", default=None,
+                    help="serve from a saved mask bank (no calibration)")
+    ap.add_argument("--sparsity", type=float, default=None,
+                    help="unstructured budget for bank re-threshold "
+                         "(default: the bank's calibrated N:M pattern)")
+    ap.add_argument("--weight-format", default="compressed",
+                    choices=["compressed", "masked"],
+                    help="bank serving: 2:4-compressed kernels vs W0*M")
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not cfg.is_encoder_decoder or args.gen > 0
     params = M.init_params(cfg, jax.random.key(0))
 
-    if args.sparse:
-        from repro.core import calibrate
-        calib = batches_for(cfg, n=8, batch=4, seq=args.prompt_len,
-                            split="calib")
-        pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=30)
-        pruned, state, _ = calibrate.unipruning_prune(
-            cfg, pcfg, params, calib, sparsities=[0.5])
-        params = pruned[0.5]
-        print("serving 2:4-pruned weights")
+    if args.sparse_artifact:
+        cfg, params = _load_sparse(args, params)
+    elif args.sparse:
+        params = _calibrate_sparse(cfg, args, params)
 
     B, P = args.batch, args.prompt_len
     batch = batches_for(cfg, n=1, batch=B, seq=P, split="valid")[0]

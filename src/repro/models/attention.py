@@ -483,7 +483,8 @@ def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
             slot, axis=1),
     }
     # absorb W_uk into q: q_c (B,H,r)
-    w_uk = p["w_uk"]["kernel"].astype(jnp.float32).reshape(kv_lora, H, nope_dim)
+    w_uk = cm.kernel_dense(p["w_uk"]).astype(jnp.float32).reshape(
+        kv_lora, H, nope_dim)
     q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_uk)
     seq_ax = "kv_seq" if seq_sharded else None
     ckv = constrain(cache["ckv"], "batch", seq_ax, None)
@@ -499,7 +500,8 @@ def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
     p_attn = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhc,bcr->bhr", p_attn.astype(jnp.bfloat16), ckv,
                      preferred_element_type=jnp.float32)  # (B,H,r)
-    w_uv = p["w_uv"]["kernel"].astype(jnp.float32).reshape(kv_lora, H, v_dim)
+    w_uv = cm.kernel_dense(p["w_uv"]).astype(jnp.float32).reshape(
+        kv_lora, H, v_dim)
     o = jnp.einsum("bhr,rhd->bhd", o_c, w_uv)
     y = cm.dense(p["wo"], o.reshape(B, 1, H * v_dim).astype(jnp.bfloat16))
     return y, cache

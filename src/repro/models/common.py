@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sparse.formats import SparseTensor
+
 PyTree = Any
 COMPUTE_DTYPE = jnp.bfloat16
 PARAM_DTYPE = jnp.float32
@@ -78,12 +80,24 @@ def dense_init(b: Builder, d_in: int, d_out: int, axes: tuple[str | None, str | 
 
 
 def dense(params: PyTree, x: jax.Array) -> jax.Array:
+    k = params["kernel"]
+    if isinstance(k, SparseTensor):
+        # 2:4-compressed kernel (sparse.apply.sparsify_params): route through
+        # the compressed matmul.  No tape: sparse trees are serving-only.
+        from repro.sparse import apply as sparse_apply
+        return sparse_apply.sparse_dense(k, x)
     from repro.core import tape as _tape
     t = _tape.current_tape()
     if t is not None:
-        t.record(params["kernel"], x)
-    k = params["kernel"].astype(COMPUTE_DTYPE)
-    return x @ k
+        t.record(k, x)
+    return x @ k.astype(COMPUTE_DTYPE)
+
+
+def kernel_dense(params: PyTree) -> jax.Array:
+    """Dense view of a (possibly compressed) kernel param, for the few call
+    sites that read weights directly (e.g. MLA absorbed-matmul decode)."""
+    k = params["kernel"]
+    return k.to_dense() if isinstance(k, SparseTensor) else k
 
 
 # ---------------------------------------------------------------------------

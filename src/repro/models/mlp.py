@@ -24,15 +24,32 @@ def mlp_init(b: Builder, d_model: int, d_ff: int, *, gated: bool = True) -> PyTr
 
 
 def mlp_apply(p: PyTree, x: jax.Array, *, act: str = "silu") -> jax.Array:
-    h = cm.dense(p["up"], x)
-    if "gate" in p:
+    if "gate" in p and _both_sparse(p["up"], p["gate"]):
+        # fused compressed pass: up and gate share the reduction dim, so one
+        # nm_matmul over [up | gate] halves the kernel launches per block
+        from repro.sparse.apply import sparse_dense2
+        h, g = sparse_dense2(p["up"]["kernel"], p["gate"]["kernel"], x)
+        h = _act(g, act) * h
+    elif "gate" in p:
+        h = cm.dense(p["up"], x)
         g = cm.dense(p["gate"], x)
-        g = _act(g, act)
-        h = g * h
+        h = _act(g, act) * h
     else:
-        h = _act(h, act)
+        h = _act(cm.dense(p["up"], x), act)
     h = constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("mlp",)))
     return cm.dense(p["down"], h)
+
+
+def _both_sparse(a: PyTree, b: PyTree) -> bool:
+    import jax as _jax
+    from repro.sparse.formats import SparseTensor
+    # fusing pays where per-call overhead dominates (interpret mode); on TPU
+    # the pre-concat of vals/idx would re-copy the weights every step,
+    # costing more HBM traffic than the saved kernel launch
+    return (_jax.default_backend() != "tpu"
+            and isinstance(a["kernel"], SparseTensor)
+            and isinstance(b["kernel"], SparseTensor)
+            and a["kernel"].idx_bits == b["kernel"].idx_bits)
 
 
 def _act(x: jax.Array, act: str) -> jax.Array:

@@ -1,16 +1,23 @@
 """Batched serving engine: request queue -> continuous batched decode.
 
 Continuous batching over a fixed-slot KV cache: requests join free slots,
-prefill runs per-request (cache written at its slot), decode advances every
-active slot one token per step, finished slots (eos/max_tokens) free up.
-This is the orchestration layer the dry-run's serve_step lowers; the engine
-itself is device-count-agnostic (works on 1 CPU device in tests and under
-the production mesh via the same jitted step functions).
+prefill runs once per admitted request (one jitted chunked forward that
+fills the slot's cache rows), decode advances every slot one token per step
+in a single jitted call.  Decode is the per-row step function vmapped over
+slots, so each slot carries its own position ``t`` - cache writes and
+attention masks are slot-local by construction (a slot mid-generation never
+sees another slot's ring writes).  Finished slots (eos/max_tokens) free up.
+
+Weights may be dense or 2:4-compressed (``sparse.apply.sparsify_params``):
+``models.common.dense`` dispatches per leaf, so the same engine serves both;
+``ServeEngine.from_artifact`` builds the sparse engine straight from a saved
+mask bank.  The engine is device-count-agnostic (1 CPU device in tests, the
+production mesh via the same jitted step functions).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +25,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+
+# layer kinds whose caches are position-masked attention rings: prompt
+# padding past the real length is invisible until overwritten.  Recurrent
+# kinds (ssm/xlstm) fold every token into their state, so their prefill
+# must run unpadded (exact length, one compile per distinct prompt length).
+_PAD_SAFE_KINDS = {"attn", "local"}
 
 
 @dataclasses.dataclass
@@ -27,6 +40,8 @@ class Request:
     max_tokens: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    pending_token: int = 0        # next token to feed (last prompt tok, then
+                                  # each generated one)
 
 
 class ServeEngine:
@@ -44,9 +59,34 @@ class ServeEngine:
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
         self._next_rid = 0
+        self._pad_prefill = set(cfg.layer_kinds) <= _PAD_SAFE_KINDS
+        # padding past the prompt is only invisible while every junk ring
+        # slot stays ahead of the decode position; sliding-window layers cap
+        # their ring at min(capacity, window), so buckets must fit that ring
+        self._min_ring = (min(capacity, cfg.sliding_window)
+                          if cfg.sliding_window else capacity)
+        self._prefill_fns: dict[int, Any] = {}
+        self._blank_row = None  # lazily-built slot-reset template
 
-        self._decode = jax.jit(
-            lambda p, tok, c, t: M.decode_step(cfg, p, tok, c, t))
+        def _row_step(p, tok, cache_row, t):
+            """One slot's decode at its own position t (vmapped over slots)."""
+            caches = jax.tree.map(lambda a: a[:, None], cache_row)
+            logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
+            return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
+
+        self._decode = jax.jit(jax.vmap(_row_step, in_axes=(None, 0, 1, 0),
+                                        out_axes=(0, 1)))
+
+    @classmethod
+    def from_artifact(cls, bank_dir, params0: Any, *,
+                      sparsity: float | None = None, compressed: bool = True,
+                      slots: int = 4, capacity: int = 512) -> "ServeEngine":
+        """Engine over bank-derived sparse weights (no re-calibration)."""
+        from repro.sparse.bank import MaskBank
+        bank = MaskBank.load(bank_dir)
+        params = bank.sparse_params(params0, sparsity=sparsity,
+                                    compressed=compressed)
+        return cls(bank.cfg, params, slots=slots, capacity=capacity)
 
     # -- client API ----------------------------------------------------------
 
@@ -76,37 +116,71 @@ class ServeEngine:
                 self.active[s] = req
                 self._prefill_slot(s, req)
 
+    def _prefill_bucket(self, n: int) -> int:
+        if not self._pad_prefill:
+            return n  # recurrent state: exact length, no padding
+        bucket = min(max(8, 1 << (n - 1).bit_length()), self.capacity)
+        # a bucket larger than the smallest attention ring would evict real
+        # in-window tokens and leave junk at positions ring_positions treats
+        # as valid -> fall back to the exact length (no padding, still one
+        # jitted chunked prefill)
+        return bucket if bucket <= self._min_ring else n
+
     def _prefill_slot(self, s: int, req: Request) -> None:
-        """Token-by-token prefill into slot s (slot-local cache writes).
+        """One jitted chunked prefill writing slot s's cache rows.
 
-        Production would run a batched prefill kernel; slot-serial decode
-        keeps the engine simple and uses the identical cache layout.
+        All prompt tokens but the last run through the prefill forward
+        (bucketed to limit recompiles); the produced cache rows replace
+        slot s's rows wholesale.  Padding past the prompt is masked during
+        decode (kpos > t) and each junk ring slot is overwritten by the
+        real token before it could become visible.
         """
-        for i, tok in enumerate(req.prompt[:-1]):
-            self._advance(s, int(tok), record=False)
-        self.pos[s] = max(len(req.prompt) - 1, 0)
-        self._last_token = int(req.prompt[-1])
-        req._pending_token = int(req.prompt[-1])
-
-    def _advance(self, s: int, token: int, record: bool = True) -> int:
-        toks = np.zeros((self.slots,), np.int32)
-        toks[s] = token
-        t = jnp.asarray(int(self.pos[s]), jnp.int32)
-        logits, caches = self._decode(self.params, jnp.asarray(toks),
-                                      self.caches, t)
-        # only slot s's cache row advanced meaningfully; caches are batched
-        self.caches = caches
-        self.pos[s] += 1
-        return int(np.asarray(jnp.argmax(logits[s])))
+        n = len(req.prompt) - 1
+        assert n < self.capacity, (n, self.capacity)
+        if n == 0:
+            # no prefill forward runs, so nothing replaces the slot's cache
+            # row; reset it explicitly or a reused slot leaks the previous
+            # request's recurrent state (attention rings are position-masked,
+            # ssm/xlstm state is not)
+            if self._blank_row is None:
+                self._blank_row = M.init_caches(self.cfg, 1, self.capacity)
+            self.caches = jax.tree.map(
+                lambda full, blank: full.at[:, s].set(blank[:, 0]),
+                self.caches, self._blank_row)
+        else:
+            bucket = self._prefill_bucket(n)
+            fn = self._prefill_fns.get(bucket)
+            if fn is None:
+                fn = jax.jit(lambda p, toks: M.prefill(
+                    self.cfg, p, {"tokens": toks},
+                    cache_capacity=self.capacity)[1])
+                self._prefill_fns[bucket] = fn
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = req.prompt[:-1]
+            row = fn(self.params, jnp.asarray(toks))
+            self.caches = jax.tree.map(
+                lambda full, new: full.at[:, s].set(new[:, 0]),
+                self.caches, row)
+        self.pos[s] = max(n, 0)
+        req.pending_token = int(req.prompt[-1])
 
     def _step(self) -> list[Request]:
+        toks = np.zeros((self.slots,), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                toks[s] = req.pending_token
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(self.pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
         finished = []
         for s, req in enumerate(self.active):
             if req is None:
                 continue
-            nxt = self._advance(s, getattr(req, "_pending_token", 0))
-            req.out.append(nxt)
-            req._pending_token = nxt
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            req.out.append(tok)
+            req.pending_token = tok
             if len(req.out) >= req.max_tokens:
                 req.done = True
                 finished.append(req)

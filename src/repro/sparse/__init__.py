@@ -1,0 +1,42 @@
+"""Sparse inference runtime: compressed formats, mask bank, execution.
+
+Three layers close the loop from UniPruning calibration to serving:
+
+* **Formats** (``formats``, ``pack``) - compressed weight layouts as pytree
+  nodes:
+
+  - ``SparseTensor``: the 2:4 layout ``kernels/nm_spmm.py`` executes.
+    For a dense kernel (..., K, N) pruned 2:4 along K it stores
+    ``vals`` (..., K/2, N) in the serving compute dtype plus in-group
+    positions, either int8 (``idx_bits=8``, (..., K/2, N)) or 2-bit-packed
+    uint8 (``idx_bits=2``, (..., K/8, N), the default - 4 positions per
+    byte).  bf16 HBM bytes: 9/16 of dense (2-bit) / 3/4 (int8).  Only
+    ``idx_bits`` is static, so ``lax.scan`` slices stacked layer kernels
+    through it transparently.
+  - ``BitMask``: unstructured keep-masks packed 8-per-byte for artifact
+    storage; unpacks to the boolean pytrees ``core/masks.py`` produces.
+
+* **Mask bank** (``bank``) - persistence of post-calibration state so one
+  search serves arbitrary budgets across process restarts.  Artifact schema
+  (``unipruning.mask-bank/v1``, written by ``ckpt.save_artifact``): a
+  directory with ``manifest.json`` + one ``leaf_NNNNNN.npy`` per non-None
+  leaf, committed atomically via tmp-dir rename.  The manifest carries
+  ``metadata = {schema, arch, smoke, pcfg: asdict(PruneConfig), steps_run}``
+  and the saved tree is ``{"Gamma": <saliency>, "V": <dual>, "stats":
+  <activation norms>}``, each in the model's params structure (None on
+  non-prunable leaves).  ``MaskBank.load(dir).masks_at(sparsity | nm)``
+  re-thresholds via ``mirror.export_masks`` - bit-identical to an
+  in-process export, no re-search.
+
+* **Execution** (``apply``) - ``sparsify_params`` swaps 2:4-maskable
+  kernels for ``SparseTensor`` leaves; ``models.common.dense`` dispatches
+  on leaf type so those kernels route through ``nm_matmul`` (Pallas on TPU,
+  interpret mode on CPU) while dense leaves keep the existing path.
+  ``ServeEngine`` / ``launch.serve`` consume it via
+  ``--sparse-artifact``/``--sparsity``.
+"""
+from repro.sparse.formats import BitMask, SparseTensor  # noqa: F401
+from repro.sparse.pack import pack_mask_tree, pack_nm, unpack_mask_tree  # noqa: F401
+from repro.sparse.bank import MaskBank  # noqa: F401
+from repro.sparse.apply import (  # noqa: F401
+    compressed_report, sparse_dense, sparse_dense2, sparsify_params)

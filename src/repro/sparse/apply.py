@@ -1,0 +1,152 @@
+"""Sparse execution: route SparseTensor kernels through ``nm_matmul``.
+
+``models.common.dense`` dispatches on leaf type, so a params tree whose
+prunable kernels were replaced by :func:`sparsify_params` serves through the
+compressed kernel (Pallas on TPU, interpret mode on CPU) while every dense
+leaf keeps the existing path.  On CPU the whole GEMM runs as a single tile
+(interpret mode has no VMEM limit), which keeps the accumulation order
+identical to XLA's dense bf16 dot - sparse serving reproduces masked-dense
+serving token-for-token.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nm_spmm import nm_matmul
+from repro.sparse import pack as pack_mod
+from repro.sparse.formats import SparseTensor
+
+PyTree = Any
+
+
+def _largest_block(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest b <= cap with dim % b == 0 and b % mult == 0.
+
+    mult encodes the TPU tiling preference (lane dim = multiples of 128,
+    reduction tiles = multiples of 4 for the 2:4 groups); callers drop the
+    preference when the dim itself cannot satisfy it.
+    """
+    for b in range(min(cap, dim), mult - 1, -1):
+        if dim % b == 0 and b % mult == 0:
+            return b
+    return dim  # dim < mult: single block
+
+
+def _run_nm(x2: jax.Array, vals: jax.Array, idx: jax.Array) -> jax.Array:
+    m, k = x2.shape
+    n = vals.shape[-1]
+    if jax.default_backend() == "tpu":
+        bn = (_largest_block(n, 256, 128) if n % 128 == 0
+              else _largest_block(n, 256))
+        return nm_matmul(x2, vals, idx,
+                         bm=_largest_block(m, 128), bk=_largest_block(k, 512, 4),
+                         bn=bn)
+    # interpret mode: one tile = one fp32 dot, bit-matching the dense path
+    return nm_matmul(x2, vals, idx, bm=m, bk=k, bn=n, interpret=True)
+
+
+def sparse_dense(st: SparseTensor, x: jax.Array) -> jax.Array:
+    """x: (..., K) @ compressed (K, N) -> (..., N) in x.dtype."""
+    assert len(st.vals.shape) == 2, (
+        "per-layer kernels only; stacked leaves are sliced by lax.scan")
+    *lead, k = x.shape
+    x2 = x.reshape(-1, k)
+    y = _run_nm(x2, st.vals.astype(x.dtype), st.unpacked_idx())
+    return y.reshape(*lead, st.shape[-1])
+
+
+def sparse_dense2(st_a: SparseTensor, st_b: SparseTensor, x: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Fused pair sharing the reduction dim (gated-MLP up+gate): one kernel
+    pass over x against [A | B] concatenated along N, then split."""
+    *lead, k = x.shape
+    na, nb = st_a.shape[-1], st_b.shape[-1]
+    x2 = x.reshape(-1, k)
+    vals = jnp.concatenate([st_a.vals, st_b.vals], axis=-1).astype(x.dtype)
+    idx = jnp.concatenate([st_a.unpacked_idx(), st_b.unpacked_idx()], axis=-1)
+    y = _run_nm(x2, vals, idx)
+    return (y[:, :na].reshape(*lead, na), y[:, na:].reshape(*lead, nb))
+
+
+# ---------------------------------------------------------------------------
+# Tree conversion
+# ---------------------------------------------------------------------------
+
+def _stacked(axes_str: str | None) -> bool:
+    return bool(axes_str) and axes_str.startswith("layers|")
+
+
+def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
+                    idx_bits: int = 2, dtype=None,
+                    predicate: Callable[[str], bool] | None = None) -> PyTree:
+    """Replace 2:4-maskable kernels with SparseTensor leaves; mask the rest.
+
+    masks: keep-mask pytree from ``mirror.export_masks`` (mode="nm").  A
+    kernel is compressed when its mask is 2:4-valid along the reduction dim
+    and it is 2-D per layer step (``axes`` - the ``models.model.param_axes``
+    tree - identifies scan-stacked leaves; >3-D leaves such as MoE expert
+    banks stay masked-dense until the kernel grows an expert axis).
+    Non-compressible masked leaves get ``W * mask``; None-mask leaves pass
+    through untouched.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_m = jax.tree_util.tree_flatten(
+        masks, is_leaf=lambda x: x is None)[0]
+    flat_a = (jax.tree_util.tree_flatten(
+        axes, is_leaf=lambda x: x is None)[0] if axes is not None
+        else [None] * len(flat))
+    out = []
+    for (kp, w), mk, ax in zip(flat, flat_m, flat_a):
+        if mk is None:
+            out.append(w)
+            continue
+        path = jax.tree_util.keystr(kp)
+        eff_ndim = w.ndim - (1 if _stacked(ax) else 0)
+        k_dim = w.shape[-2]
+        bits = idx_bits if k_dim % 8 == 0 else 8
+        compressible = (eff_ndim == 2 and k_dim % 4 == 0
+                        and (predicate is None or predicate(path))
+                        and _is_nm(mk))
+        if compressible:
+            out.append(pack_mod.pack_nm(w, mk, idx_bits=bits, dtype=dtype))
+        else:
+            out.append(w * mk.astype(w.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _is_nm(mask: jax.Array, m: int = 4, n: int = 2) -> bool:
+    """Host-side check: exactly n kept per contiguous group of m."""
+    import numpy as np
+    if mask.shape[-2] % m:
+        return False
+    g = np.asarray(mask).reshape(*mask.shape[:-2], mask.shape[-2] // m, m,
+                                 mask.shape[-1])
+    return bool((g.sum(-2) == n).all())
+
+
+def compressed_report(params: PyTree) -> dict:
+    """Per-leaf and total weight bytes: compressed vs dense-bf16 equivalent."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, SparseTensor))
+    layers = []
+    comp = dense_eq = 0
+    for kp, leaf in flat:
+        if not isinstance(leaf, SparseTensor):
+            continue
+        d = 1
+        for s in leaf.shape:
+            d *= s
+        d *= 2  # bf16 serving layout
+        layers.append({"path": jax.tree_util.keystr(kp),
+                       "shape": list(leaf.shape), "idx_bits": leaf.idx_bits,
+                       "bytes_compressed": leaf.nbytes,
+                       "bytes_dense_bf16": d,
+                       "ratio": leaf.nbytes / d})
+    comp = sum(r["bytes_compressed"] for r in layers)
+    dense_eq = sum(r["bytes_dense_bf16"] for r in layers)
+    return {"layers": layers, "bytes_compressed": comp,
+            "bytes_dense_bf16": dense_eq,
+            "ratio": comp / dense_eq if dense_eq else None}

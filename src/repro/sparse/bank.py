@@ -1,0 +1,138 @@
+"""Persistent mask bank: one calibration, arbitrary budgets, any process.
+
+UniPruning's one-shot property (paper §4.3: "generate pruning masks for
+arbitrary sparsity levels" after a brief calibration) only pays off if the
+calibration state outlives the Python process.  The bank persists the
+post-search state - Gamma, the dual V, the activation stats, and the
+PruneConfig - as a named on-disk artifact (``ckpt.save_artifact``:
+manifest.json + one .npy per leaf, atomic commit).  ``masks_at`` then
+re-thresholds via ``mirror.export_masks`` in one shot: no mirror-descent
+re-run per sparsity level, across restarts.
+
+Global-update baselines (SparseLLM, ADMM pruning) re-solve per target
+configuration; here a new budget is a quantile of a saved tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import PruneConfig, get_config, get_smoke_config
+
+PyTree = Any
+
+SCHEMA = "unipruning.mask-bank/v1"
+
+
+def _cfg_for(arch: str, smoke: bool):
+    return get_smoke_config(arch) if smoke else get_config(arch)
+
+
+def _params_template(cfg) -> PyTree:
+    """Params-structure tree of placeholder leaves (no allocation).
+
+    load_artifact only uses the template for structure + key paths; leaves
+    stored as None in the manifest come back None.
+    """
+    from repro.models import model as M
+    return jax.tree.map(lambda s: 0, M.param_shapes(cfg))
+
+
+class MaskBank:
+    """Saved calibration state; re-threshold to masks at any budget."""
+
+    def __init__(self, cfg, pcfg: PruneConfig, Gamma: PyTree, V: PyTree,
+                 stats: PyTree, meta: dict):
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.Gamma = Gamma
+        self.V = V
+        self.stats = stats
+        self.meta = meta
+
+    # -- persistence ---------------------------------------------------------
+
+    @classmethod
+    def save(cls, directory, *, arch: str, smoke: bool, state,
+             stats: PyTree = None, pcfg: PruneConfig,
+             extra: dict | None = None) -> "MaskBank":
+        """state: core.mirror.SearchState (or any object with Gamma/V)."""
+        meta = {"schema": SCHEMA, "arch": arch, "smoke": bool(smoke),
+                "pcfg": dataclasses.asdict(pcfg),
+                "steps_run": int(state.step) if hasattr(state, "step") else None,
+                **(extra or {})}
+        tree = {"Gamma": state.Gamma, "V": state.V, "stats": stats}
+        ckpt.save_artifact(directory, tree, metadata=meta)
+        return cls(_cfg_for(arch, smoke), pcfg, state.Gamma, state.V,
+                   stats, meta)
+
+    @classmethod
+    def load(cls, directory) -> "MaskBank":
+        probe = {"Gamma": 0}  # metadata first: the template needs the arch
+        _, meta = ckpt.load_artifact(directory, probe)
+        assert meta.get("schema") == SCHEMA, meta
+        cfg = _cfg_for(meta["arch"], meta["smoke"])
+        tpl = _params_template(cfg)
+        tree, _ = ckpt.load_artifact(
+            directory, {"Gamma": tpl, "V": tpl, "stats": tpl})
+        to_dev = lambda t: jax.tree.map(
+            lambda x: None if x is None else jnp.asarray(x), t,
+            is_leaf=lambda x: x is None)
+        pcfg = PruneConfig(**meta["pcfg"])
+        return cls(cfg, pcfg, to_dev(tree["Gamma"]), to_dev(tree["V"]),
+                   to_dev(tree["stats"]), meta)
+
+    # -- one-shot mask export ------------------------------------------------
+
+    def masks_at(self, sparsity: float | None = None,
+                 nm: tuple[int, int] | None = None) -> PyTree:
+        """Keep-mask pytree at an arbitrary budget, bit-identical to an
+        in-process ``mirror.export_masks`` on the live SearchState.
+
+        sparsity: unstructured global budget; nm: (n, m) semi-structured.
+        With neither, the bank's calibrated PruneConfig decides (nm mode ->
+        its n:m pattern; unstructured requires an explicit sparsity).
+        """
+        from repro.core import mirror
+        pcfg = self.pcfg
+        if nm is not None:
+            pcfg = dataclasses.replace(pcfg, mode="nm", nm_n=nm[0],
+                                       nm_m=nm[1])
+        elif sparsity is not None:
+            pcfg = dataclasses.replace(pcfg, mode="unstructured")
+        else:
+            assert pcfg.mode == "nm", \
+                "unstructured bank needs an explicit sparsity"
+        return mirror.export_masks(
+            pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
+            V=self.V)
+
+    def masks_grid(self, sparsities: Iterable[float]) -> dict[float, PyTree]:
+        return {s: self.masks_at(sparsity=s) for s in sparsities}
+
+    # -- serving-ready parameter trees --------------------------------------
+
+    def sparse_params(self, params0: PyTree, *, sparsity: float | None = None,
+                      nm: tuple[int, int] | None = None,
+                      compressed: bool = True, idx_bits: int = 2,
+                      dtype=None) -> PyTree:
+        """W0 -> pruned params: compressed (SparseTensor kernels routed
+        through nm_matmul) or masked-dense (W0 * mask)."""
+        from repro.core import masks as masks_mod
+        from repro.models import model as M
+        from repro.sparse import apply as apply_mod
+        if nm is None and sparsity is None and self.pcfg.mode == "nm":
+            nm = (self.pcfg.nm_n, self.pcfg.nm_m)
+        masks = self.masks_at(sparsity=sparsity, nm=nm)
+        if not compressed or nm is None:
+            return masks_mod.apply_masks(params0, masks)
+        if dtype is None:
+            from repro.models.common import COMPUTE_DTYPE
+            dtype = COMPUTE_DTYPE
+        return apply_mod.sparsify_params(
+            params0, masks, axes=M.param_axes(self.cfg), idx_bits=idx_bits,
+            dtype=dtype)

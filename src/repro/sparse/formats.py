@@ -1,0 +1,149 @@
+"""Compressed weight formats (pytree nodes).
+
+``SparseTensor``: the 2:4 layout ``kernels/nm_spmm.py`` executes - per group
+of 4 along the reduction dim, the two surviving values (``vals``,
+(..., K/2, N), compute dtype) and their in-group positions.  Positions are
+stored either as int8 (``idx_bits=8``: (..., K/2, N)) or packed 4-per-byte
+(``idx_bits=2``: (..., K/8, N) uint8), moving 9/16 of the dense-bf16 HBM
+bytes.  Registered as a pytree node whose only static data is ``idx_bits``,
+so ``lax.scan`` over stacked layer parameters slices the leading layer axis
+of ``vals``/``idx`` exactly like a dense kernel leaf.
+
+``BitMask``: 8-masks-per-byte storage format for unstructured keep-masks
+(bank artifacts); unpacks back to the boolean pytrees ``core/masks.py``
+produces.  Not executed - unstructured serving stays masked-dense.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _unpack_idx2(packed: jax.Array) -> jax.Array:
+    """(..., K/8, N) uint8 -> (..., K/2, N) int8 in-group positions."""
+    *lead, rows, n = packed.shape
+    codes = [(packed >> (2 * j)) & 0x3 for j in range(4)]
+    out = jnp.stack(codes, axis=-2)                # (..., K/8, 4, N)
+    return out.reshape(*lead, rows * 4, n).astype(jnp.int8)
+
+
+def _pack_idx2(idx: jax.Array) -> jax.Array:
+    """(..., K/2, N) int8 (values 0..3) -> (..., K/8, N) uint8."""
+    *lead, rows, n = idx.shape
+    assert rows % 4 == 0, f"2-bit packing needs K%8==0, got K/2={rows}"
+    g = idx.astype(jnp.uint8).reshape(*lead, rows // 4, 4, n)
+    out = jnp.zeros(g.shape[:-2] + (n,), jnp.uint8)
+    for j in range(4):
+        out = out | (g[..., j, :] << (2 * j))
+    return out
+
+
+@jax.tree_util.register_pytree_node_class
+class SparseTensor:
+    """2:4-compressed weight standing in for a dense (..., K, N) kernel."""
+
+    def __init__(self, vals: jax.Array, idx: jax.Array, idx_bits: int = 8):
+        assert idx_bits in (2, 8), idx_bits
+        self.vals = vals
+        self.idx = idx
+        self.idx_bits = idx_bits
+
+    def tree_flatten(self):
+        return (self.vals, self.idx), (self.idx_bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, idx_bits=aux[0])
+
+    # -- metadata (trace-safe: shapes only) ---------------------------------
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        *lead, half_k, n = self.vals.shape
+        return (*lead, half_k * 2, n)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.vals.shape)
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return (int(np.prod(self.vals.shape)) * self.vals.dtype.itemsize
+                + int(np.prod(self.idx.shape)) * self.idx.dtype.itemsize)
+
+    # -- conversions --------------------------------------------------------
+
+    def unpacked_idx(self) -> jax.Array:
+        """int8 (..., K/2, N) positions regardless of storage packing."""
+        return _unpack_idx2(self.idx) if self.idx_bits == 2 else self.idx
+
+    def to_dense(self) -> jax.Array:
+        """Decompress to the dense (..., K, N) array (masked positions = 0)."""
+        vals, idx = self.vals, self.unpacked_idx()
+        *lead, half_k, n = vals.shape
+        g = half_k // 2
+        v = vals.reshape(*lead, g, 2, n)
+        p = idx.reshape(*lead, g, 2, n).astype(jnp.int32)
+        r = jnp.arange(4)[:, None]
+        dense = jnp.zeros((*lead, g, 4, n), vals.dtype)
+        for j in range(2):
+            hit = p[..., j:j + 1, :] == r
+            dense = dense + jnp.where(hit, v[..., j:j + 1, :], 0)
+        return dense.reshape(*lead, g * 4, n)
+
+    def __repr__(self):
+        return (f"SparseTensor(shape={self.shape}, dtype={self.dtype}, "
+                f"idx_bits={self.idx_bits})")
+
+
+@jax.tree_util.register_pytree_node_class
+class BitMask:
+    """Boolean mask packed 8-per-byte (flat uint8 buffer + static shape)."""
+
+    def __init__(self, bits: jax.Array, shape: tuple[int, ...]):
+        self.bits = bits
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.bits,), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.bits.shape))
+
+    @classmethod
+    def pack(cls, mask: jax.Array) -> "BitMask":
+        flat = jnp.ravel(mask).astype(jnp.uint8)
+        pad = -flat.size % 8
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint8)])
+        b = flat.reshape(-1, 8)
+        weights = (1 << jnp.arange(8, dtype=jnp.uint8))
+        return cls(jnp.sum(b * weights, axis=-1).astype(jnp.uint8),
+                   tuple(mask.shape))
+
+    def to_dense(self) -> jax.Array:
+        n = int(np.prod(self.shape))
+        b = self.bits[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None, :]
+        flat = (b & 1).reshape(-1)[:n]
+        return flat.astype(jnp.bool_).reshape(self.shape)
+
+
+def sparse_leaves(tree: Any) -> list[SparseTensor]:
+    """All SparseTensor nodes in a pytree (treated as subtree roots)."""
+    found: list[SparseTensor] = []
+    jax.tree.map(lambda x: found.append(x) if isinstance(x, SparseTensor)
+                 else None, tree,
+                 is_leaf=lambda x: isinstance(x, SparseTensor))
+    return found

@@ -1,0 +1,66 @@
+"""Pack/unpack converters: mask pytrees (core/masks.py) -> compressed formats.
+
+The mask, not a top-k recomputation, is the source of truth: UniPruning's
+export ties are broken by the dual V (see ``mirror.export_masks``), so
+re-deriving positions from |W| here could disagree with the exported mask.
+Packing from the mask guarantees ``to_dense() == W * mask`` bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import BitMask, SparseTensor, _pack_idx2
+
+
+def nm_positions(mask: jax.Array, *, m: int = 4, n: int = 2) -> jax.Array:
+    """2:4 keep-mask (..., K, N) -> kept in-group positions (..., K/2, N) int8.
+
+    Requires exactly ``n`` kept entries per contiguous group of ``m`` along
+    the second-to-last dim (what ``masks.nm_masks`` produces); positions come
+    out ascending within each group, matching the kernel layout.
+    """
+    *lead, k, cols = mask.shape
+    assert k % m == 0, (k, m)
+    g = mask.reshape(*lead, k // m, m, cols)
+    r = jnp.arange(m, dtype=jnp.int8)[:, None]
+    # kept entries sort to the front (their position), dropped sort to m
+    key = jnp.where(g, r, jnp.int8(m))
+    pos = jnp.sort(key, axis=-2)[..., :n, :]
+    return pos.reshape(*lead, (k // m) * n, cols).astype(jnp.int8)
+
+
+def pack_nm(w: jax.Array, mask: jax.Array, *, idx_bits: int = 8,
+            dtype=None) -> SparseTensor:
+    """Dense weight + 2:4 keep-mask -> SparseTensor.
+
+    dtype: storage dtype for the surviving values (e.g. the serving compute
+    dtype); default keeps ``w.dtype``.  ``idx_bits=2`` packs positions
+    4-per-byte (needs K % 8 == 0).
+    """
+    *lead, k, cols = w.shape
+    idx = nm_positions(mask)
+    g = w.reshape(*lead, k // 4, 4, cols)
+    gi = idx.reshape(*lead, k // 4, 2, cols).astype(jnp.int32)
+    vals = jnp.take_along_axis(g, gi, axis=-2).reshape(*lead, k // 2, cols)
+    if dtype is not None:
+        vals = vals.astype(dtype)
+    if idx_bits == 2:
+        return SparseTensor(vals, _pack_idx2(idx), idx_bits=2)
+    return SparseTensor(vals, idx, idx_bits=8)
+
+
+def pack_mask_tree(masks: Any) -> Any:
+    """Boolean mask pytree -> BitMask pytree (None leaves stay None)."""
+    return jax.tree.map(
+        lambda m: None if m is None else BitMask.pack(m),
+        masks, is_leaf=lambda x: x is None)
+
+
+def unpack_mask_tree(packed: Any) -> Any:
+    """BitMask pytree -> boolean mask pytree (None leaves stay None)."""
+    return jax.tree.map(
+        lambda b: b.to_dense() if isinstance(b, BitMask) else None,
+        packed, is_leaf=lambda x: x is None or isinstance(x, BitMask))

@@ -1,0 +1,118 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (not installed here).
+
+Installed into ``sys.modules`` by conftest only when the real package is
+missing.  Supports the subset the suite uses: ``@settings(max_examples=N,
+deadline=None)``, ``@given(**kwargs)`` with ``sampled_from`` / ``integers``
+/ ``floats`` / ``booleans`` strategies.  Each test runs ``max_examples``
+times with deterministic draws (boundary values first, then seeded
+pseudo-random), so failures are reproducible; there is no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_at(self, rng: random.Random, i: int):
+        return self._draw(rng, i)
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng, i: options[i % len(options)]
+                     if i < len(options) else rng.choice(options))
+
+
+def integers(min_value, max_value):
+    def draw(rng, i):
+        if i == 0:
+            return min_value
+        if i == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def floats(min_value, max_value, width=64, **_kw):
+    def draw(rng, i):
+        if i == 0:
+            return float(min_value)
+        if i == 1:
+            return float(max_value)
+        return rng.uniform(float(min_value), float(max_value))
+    return _Strategy(draw)
+
+
+def booleans():
+    return _Strategy(lambda rng, i: bool(i % 2) if i < 2 else rng.random() < 0.5)
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng, i: tuple(s.example_at(rng, i) for s in strats))
+
+
+def just(value):
+    return _Strategy(lambda rng, i: value)
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read at call time: @settings sits ABOVE @given, so it applies
+            # after us and tags the wrapper, not fn
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 20))
+            for i in range(n):
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}".encode())
+                rng = random.Random(seed)
+                drawn = {k: s.example_at(rng, i)
+                         for k, s in sorted(strategies.items())}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: {drawn!r}"
+                    ) from e
+        # n examples collapse into one pytest item.  Hide the drawn-argument
+        # parameters from pytest's fixture resolution (wraps copies
+        # __wrapped__, which inspect.signature would follow otherwise).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper._shim_given = True
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("sampled_from", "integers", "floats", "booleans", "tuples",
+                 "just"):
+        setattr(strat, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strat
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

@@ -7,6 +7,51 @@ from repro.models import model as M
 from repro.serve.engine import ServeEngine
 
 
+def test_prefill_padding_respects_sliding_window_ring():
+    """gemma2 smoke caps local-attention rings at window=16: a pow-2 prefill
+    bucket larger than the ring would evict real in-window tokens and leave
+    junk at positions the ring treats as valid.  Padded and exact prefill
+    must decode identically."""
+    cfg = get_smoke_config("gemma2-2b")
+    params = M.init_params(cfg, jax.random.key(0))
+    prompt = np.arange(1, 19) % cfg.vocab_size       # len 18 > window ring 16
+    eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    rid = eng.submit(prompt, 4)
+    out = eng.run()[rid]
+    # oracle: token-by-token decode through the same jitted step function
+    caches = M.init_caches(cfg, 1, 32)
+    dec = jax.jit(lambda p, tok, c, t: M.decode_step(cfg, p, tok, c, t))
+    tok = None
+    for t, x in enumerate(prompt):
+        logits, caches = dec(params, np.array([x], np.int32), caches,
+                             np.int32(t))
+        tok = int(np.asarray(logits[0]).argmax())
+    want = [tok]
+    for i in range(3):
+        logits, caches = dec(params, np.array([tok], np.int32), caches,
+                             np.int32(len(prompt) + i))
+        tok = int(np.asarray(logits[0]).argmax())
+        want.append(tok)
+    assert out == want
+
+
+def test_single_token_prompt_resets_reused_slot():
+    """xlstm recurrent state is not position-masked: a 1-token prompt (which
+    runs no prefill forward) admitted into a reused slot must not see the
+    previous request's state."""
+    cfg = get_smoke_config("xlstm-125m")
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    first = eng.submit(np.array([5, 6, 7, 8, 9]), 4)
+    eng.run()
+    second = eng.submit(np.array([3]), 4)
+    reused = eng.run()[second]
+    fresh_eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    rid = fresh_eng.submit(np.array([3]), 4)
+    fresh = fresh_eng.run()[rid]
+    assert reused == fresh
+
+
 def test_engine_batching_invariance():
     cfg = get_smoke_config("llama3.2-1b")
     params = M.init_params(cfg, jax.random.key(0))

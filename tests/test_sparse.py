@@ -1,0 +1,182 @@
+"""Sparse inference runtime: formats, mask bank, compressed execution."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig, get_smoke_config
+from repro.core import calibrate, masks as masks_mod, metrics as metrics_mod
+from repro.core import mirror
+from repro.core.prunable import prunable_map
+from repro.data.synthetic import batches_for
+from repro.kernels import ref as kref
+from repro.kernels.nm_spmm import nm_matmul
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.sparse import apply as apply_mod
+from repro.sparse import formats, pack
+from repro.sparse.bank import MaskBank
+
+CFG = get_smoke_config("llama3.2-1b")
+
+
+def _tree_eq(a, b):
+    la = jax.tree.leaves(a, is_leaf=lambda x: x is None)
+    lb = jax.tree.leaves(b, is_leaf=lambda x: x is None)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if x is None:
+            assert y is None
+            continue
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def nm_masks_tree():
+    params = M.init_params(CFG, jax.random.key(0))
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    return params, masks_mod.nm_masks(scores)
+
+
+# -- formats: pack -> unpack round trips ------------------------------------
+
+@pytest.mark.parametrize("idx_bits", [8, 2])
+def test_nm_pack_roundtrip_equals_masked_dense(idx_bits):
+    w = jax.random.normal(jax.random.key(3), (64, 48), jnp.float32)
+    mask = kref.nm_mask_ref(w)
+    st = pack.pack_nm(w, mask, idx_bits=idx_bits)
+    assert st.shape == w.shape and st.idx_bits == idx_bits
+    np.testing.assert_array_equal(np.asarray(st.to_dense()),
+                                  np.asarray(w * mask))
+    # storage: vals f32 + idx; 2-bit = 1/16 of an int8 idx plane per row grp
+    idx_bytes = w.size // 8 if idx_bits == 2 else w.size // 2
+    assert st.nbytes == w.size // 2 * 4 + idx_bytes
+
+
+def test_nm_pack_stacked_layer_leaves():
+    w = jax.random.normal(jax.random.key(4), (3, 32, 16), jnp.float32)
+    mask = jnp.stack([kref.nm_mask_ref(w[i]) for i in range(3)])
+    st = pack.pack_nm(w, mask, idx_bits=2)
+    np.testing.assert_array_equal(np.asarray(st.to_dense()),
+                                  np.asarray(w * mask))
+
+
+def test_bitmask_roundtrip():
+    key = jax.random.key(5)
+    for shape in [(33, 7), (64, 128), (5,)]:
+        mask = jax.random.bernoulli(key, 0.4, shape)
+        bm = formats.BitMask.pack(mask)
+        assert bm.nbytes == -(-int(np.prod(shape)) // 8)
+        np.testing.assert_array_equal(np.asarray(bm.to_dense()),
+                                      np.asarray(mask))
+    tree = {"a": mask, "b": None}
+    _tree_eq(pack.unpack_mask_tree(pack.pack_mask_tree(tree)), tree)
+
+
+# -- kernel vs oracle on the engine's decode shapes -------------------------
+
+def test_nm_matmul_interpret_on_decode_shapes():
+    """Exact GEMM shapes the smoke engine decodes: (slots, K) per kernel."""
+    shapes = {(CFG.d_model, CFG.num_heads * CFG.head_dim),
+              (CFG.d_model, CFG.num_kv_heads * CFG.head_dim),
+              (CFG.num_heads * CFG.head_dim, CFG.d_model),
+              (CFG.d_model, CFG.d_ff), (CFG.d_ff, CFG.d_model)}
+    for i, (K, N) in enumerate(sorted(shapes)):
+        w = jax.random.normal(jax.random.key(i), (K, N), jnp.float32)
+        vals, idx = kref.compress_24(w)
+        x = 0.1 * jax.random.normal(jax.random.key(100 + i), (4, K))
+        y = nm_matmul(x, vals, idx, bm=4, bk=K, bn=N, interpret=True)
+        yr = kref.nm_matmul_ref(x, vals, idx)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -- sparsify + dispatch ----------------------------------------------------
+
+def test_sparse_forward_bit_matches_masked_dense(nm_masks_tree):
+    params, masks = nm_masks_tree
+    sp = apply_mod.sparsify_params(params, masks, axes=M.param_axes(CFG),
+                                   idx_bits=2, dtype=jnp.bfloat16)
+    rep = apply_mod.compressed_report(sp)
+    assert rep["layers"] and rep["ratio"] <= 5 / 8  # 2-bit idx: 9/16
+    masked = masks_mod.apply_masks(params, masks)
+    batch = batches_for(CFG, n=1, batch=2, seq=16, split="valid")[0]
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    lg_s, _, _ = M.forward(CFG, sp, batch)
+    lg_d, _, _ = M.forward(CFG, masked, batch)
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_d))
+
+
+def test_sparse_engine_tokens_match_masked_dense(nm_masks_tree):
+    params, masks = nm_masks_tree
+    sp = apply_mod.sparsify_params(params, masks, axes=M.param_axes(CFG),
+                                   idx_bits=2, dtype=jnp.bfloat16)
+    masked = masks_mod.apply_masks(params, masks)
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11])]
+    outs = []
+    for p in (sp, masked):
+        eng = ServeEngine(CFG, p, slots=2, capacity=32)
+        rids = [eng.submit(pr, 5) for pr in prompts]
+        res = eng.run()
+        outs.append([res[r] for r in rids])
+    assert outs[0] == outs[1]
+
+
+# -- mask bank --------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def calibrated():
+    params = M.init_params(CFG, jax.random.key(0))
+    calib = batches_for(CFG, n=4, batch=2, seq=32, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=4)
+    stats = calibrate.collect_stats(CFG, params, calib[:2])
+    state, _ = calibrate.run_search(CFG, pcfg, params, calib, stats)
+    return params, pcfg, stats, state
+
+
+def test_bank_roundtrip_masks_bit_exact(calibrated, tmp_path):
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    bank = MaskBank.load(d)
+    assert bank.pcfg == pcfg
+    # saved state round-trips exactly
+    _tree_eq(bank.Gamma, state.Gamma)
+    _tree_eq(bank.V, state.V)
+    _tree_eq(bank.stats, stats)
+    # one-shot re-threshold across restarts == in-process export, 3 budgets
+    pc_u = dataclasses.replace(pcfg, mode="unstructured")
+    for s in (0.4, 0.5, 0.6):
+        _tree_eq(bank.masks_at(sparsity=s),
+                 mirror.export_masks(pc_u, state.Gamma, s, V=state.V))
+    # and the calibrated N:M pattern
+    _tree_eq(bank.masks_at(),
+             mirror.export_masks(pcfg, state.Gamma, 0.5, V=state.V))
+
+
+def test_bank_sparse_params_serve(calibrated, tmp_path):
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    eng = ServeEngine.from_artifact(d, params, slots=1, capacity=32)
+    assert formats.sparse_leaves(eng.params)
+    rid = eng.submit(np.array([3, 1, 4, 1, 5]), 4)
+    out = eng.run()[rid]
+    assert len(out) == 4
+
+
+# -- engine prefill semantics ----------------------------------------------
+
+def test_engine_chunked_prefill_single_compile_per_bucket():
+    params = M.init_params(CFG, jax.random.key(0))
+    eng = ServeEngine(CFG, params, slots=2, capacity=64)
+    for p in ([1, 2, 3], [4, 5, 6, 7], [8, 9]):  # all pad to one bucket
+        eng.submit(np.array(p), 2)
+    eng.run()
+    assert set(eng._prefill_fns) == {8}  # bucketed: one jitted prefill
