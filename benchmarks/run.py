@@ -2,15 +2,45 @@
 
 Prints each table and a final ``name,us_per_call,derived`` CSV summary;
 writes structured results to results/bench/results.json.
+
+``--smoke`` runs only the serve-path bench (CI gate): it must produce
+``results/bench/BENCH_serve.json`` with a compressed weight-byte ratio at
+or under the 2-bit-packed bound of 9/16, token parity vs masked-dense, and
+fused-vs-vmapped engine token parity - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
 
 
+def smoke() -> None:
+    from benchmarks import table8_inference
+
+    rows: list[dict] = []
+    result = table8_inference.serve_bench(rows)
+    path = table8_inference.write_serve_json(result)
+    assert path.exists(), path
+    ratio = result["weight_bytes_ratio"]
+    assert ratio is not None and ratio <= 9 / 16 + 1e-9, (
+        f"compressed weight-byte ratio {ratio} exceeds the 2-bit-packed "
+        "bound 9/16")
+    assert result["tokens_match_masked_dense"], \
+        "compressed decode diverged from masked-dense"
+    assert result["engine_tokens_match_fused_vs_vmap"], \
+        "fused engine decode diverged from the vmapped scan"
+    print(f"smoke ok: wrote {path} (ratio {ratio:.4f})")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve bench only + BENCH_serve.json assertions")
+    if ap.parse_args().smoke:
+        smoke()
+        return
     from benchmarks import (fig2_high_sparsity, oneshot_export,
                             table1_unstructured, table2_semistructured,
                             table4_local_metric, table5_mirror_ablation,

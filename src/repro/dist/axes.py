@@ -113,11 +113,22 @@ def _divisible(shape, spec, mesh) -> P:
     return P(*out)
 
 
+def spec_for_shape(rules: ShardingRules, names, shape) -> P:
+    """Divisibility-checked PartitionSpec for logical ``names`` on ``shape``.
+
+    The shared primitive under both dense-leaf and compressed-leaf sharding
+    derivation: compressed components (vals K/2, idx K/8 of the same dense
+    kernel) reuse the dense kernel's logical names and only the per-dim
+    divisibility check differs.
+    """
+    return _divisible(shape, rules.spec(names), rules.mesh)
+
+
 def constrain(x: jax.Array, *names) -> jax.Array:
     """with_sharding_constraint under installed rules; identity otherwise."""
     rules = current_rules()
     if rules is None:
         return x
-    spec = _divisible(x.shape, rules.spec(names), rules.mesh)
+    spec = spec_for_shape(rules, names, x.shape)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec))

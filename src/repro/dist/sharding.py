@@ -4,6 +4,15 @@ Specs are derived from the logical-axis annotations the model emits
 (``models.model.param_axes``) through a :class:`~repro.dist.axes.ShardingRules`
 mapping, with a per-dimension divisibility fallback (a dim that the mapped
 mesh axes do not divide is replicated instead of erroring).
+
+Compressed leaves (``sparse.formats.SparseTensor`` / ``BitMask``) shard too:
+a SparseTensor standing in for a dense (K, N) kernel inherits the dense
+kernel's logical axes - ``vals`` (K/2, N) and ``idx`` (K/2 or K/8, N) both
+take the N-axis sharding, and keep the K-axis sharding whenever the halved
+(vals) / packed-eighthed (idx) dim still divides the mesh axes.  BitMask
+bits are a flat byte buffer with no meaningful axis: replicated.  So a
+MaskBank-loaded compressed tree placed with ``params_sharding`` serves under
+the production mesh instead of replicating every sparse leaf.
 """
 from __future__ import annotations
 
@@ -12,7 +21,8 @@ from typing import Any
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.dist.axes import ShardingRules, _divisible, make_rules
+from repro.dist.axes import ShardingRules, make_rules, spec_for_shape
+from repro.sparse.formats import BitMask, SparseTensor
 
 PyTree = Any
 
@@ -32,15 +42,46 @@ def _one(axes):
     return axes[0] if isinstance(axes, tuple) and len(axes) == 1 else axes
 
 
+def sparse_leaf_sharding(axes_str: str | None, st: SparseTensor,
+                         rules: ShardingRules) -> SparseTensor:
+    """Sharding for one SparseTensor leaf, as a matching pytree node.
+
+    Both components reuse the dense kernel's logical axis names (the leading
+    "layers" axis of stacked leaves included); only the divisibility check
+    sees the component's actual shape, so the K-dim sharding survives
+    exactly when K/2 (vals) resp. K/2-or-K/8 (idx) still divides the mapped
+    mesh axes.  Returned as a SparseTensor of NamedShardings so the tree is
+    a valid device_put / in_shardings target for the compressed params.
+    """
+    if axes_str is None:
+        rep = NamedSharding(rules.mesh, P())
+        return SparseTensor(rep, rep, idx_bits=st.idx_bits)
+    names = axes_str.split("|")
+    return SparseTensor(
+        NamedSharding(rules.mesh,
+                      spec_for_shape(rules, names, st.vals.shape)),
+        NamedSharding(rules.mesh,
+                      spec_for_shape(rules, names, st.idx.shape)),
+        idx_bits=st.idx_bits)
+
+
 def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
                     rules: ShardingRules) -> PyTree:
-    """'|'-joined logical-axis strings + shapes -> NamedSharding tree."""
+    """'|'-joined logical-axis strings + shapes -> NamedSharding tree.
+
+    ``shapes_tree`` may be ``models.model.param_shapes`` output or an actual
+    params tree; SparseTensor leaves (compressed kernels) get component-wise
+    specs via :func:`sparse_leaf_sharding`, BitMask leaves replicate.
+    """
     def leaf(axes_str, shape_like):
+        if isinstance(shape_like, SparseTensor):
+            return sparse_leaf_sharding(axes_str, shape_like, rules)
+        if isinstance(shape_like, BitMask):
+            return BitMask(NamedSharding(rules.mesh, P()), shape_like.shape)
         if axes_str is None or shape_like is None:
             return NamedSharding(rules.mesh, P())
         names = axes_str.split("|")
-        spec = rules.spec(names)
-        spec = _divisible(shape_like.shape, spec, rules.mesh)
+        spec = spec_for_shape(rules, names, shape_like.shape)
         return NamedSharding(rules.mesh, spec)
 
     return jax.tree.map(leaf, axes_tree, shapes_tree,

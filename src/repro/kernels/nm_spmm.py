@@ -4,18 +4,27 @@ NVIDIA-sparse-tensor-core speedup, Table 8).
 TPU MXUs have no sparse mode, so the win is HBM *bandwidth*: decode-shape
 GEMMs are memory-bound (arithmetic intensity ~ batch << 240 flops/byte), and
 a 2:4 weight stored compressed moves ~9/16 of the dense bf16 bytes
-(values K/2*N*2B + 8-bit indices K/2*N*1B vs dense K*N*2B; 2-bit packed
-indices push that to ~9/32).  The kernel streams compressed tiles HBM->VMEM,
-expands them to dense in-register on the VPU (a masked broadcast - no
-gather), and feeds the MXU a normal dense matmul.
+(values K/2*N*2B + 2-bit packed indices K/8*N*1B vs dense K*N*2B; int8
+indices give the weaker 3/4 fallback).  The kernel streams compressed tiles
+HBM->VMEM, expands them to dense in-register on the VPU (a masked broadcast
+- no gather), and feeds the MXU a normal dense matmul.
 
 Layout: W (K, N) pruned 2:4 along K (the reduction dim).  Compressed:
   vals (K/2, N)  bf16   - the two surviving values per group of 4
-  idx  (K/2, N)  int8   - their in-group positions (0..3), ascending
+and one of two index layouts, named by the tags in ``sparse.formats``:
+  idx  (K/2, N)  int8   - LAYOUT_INT8: in-group positions (0..3), ascending
+  idx  (K/8, N)  uint8  - LAYOUT_PACKED2: 4 positions per byte, bits 2j..2j+1
+                          hold the position of compressed row 4r+j
+
+With LAYOUT_PACKED2 the packed bytes are what streams HBM->VMEM; the 2-bit
+unpack is a bitwise shift/mask on the VPU *after* the copy, so the index
+plane costs K/8*N bytes of bandwidth instead of K/2*N.  The int8 path is
+kept as a fallback (byte-padded planes, legacy callers).
 
 Block tiling: (bm x bk) @ (bk x bn) with compressed operand tiles
-(bk/2 x bn); K is the innermost (arbitrary) grid dim accumulating into an
-f32 VMEM scratch, flushed to the output on the last K step.
+(bk/2 x bn) vals and (bk/2 x bn | bk/8 x bn) idx; K is the innermost
+(arbitrary) grid dim accumulating into an f32 VMEM scratch, flushed to the
+output on the last K step.
 """
 from __future__ import annotations
 
@@ -28,6 +37,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 # renamed across JAX versions (TPUCompilerParams <= 0.4.x)
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# The index-plane layout tags the kernel dispatches on.  Single source of
+# truth; ``sparse.formats`` re-exports them for the storage side.
+LAYOUT_INT8 = "int8"
+LAYOUT_PACKED2 = "packed2"
+
+
+def unpack_idx2(packed: jax.Array) -> jax.Array:
+    """(..., rows, n) uint8 packed codes -> (..., rows*4, n) int8 positions.
+
+    The single definition of the 2-bit layout: byte row r carries compressed
+    rows 4r..4r+3 in bit pairs 2j..2j+1.  Used both as the in-kernel VMEM
+    unpack (2-D tile after the HBM->VMEM copy; shift/mask runs on the VPU in
+    int32 lanes, Mosaic's native integer width, then narrows to int8 for the
+    expand compare) and, via ``sparse.formats``, as the host/storage unpack.
+    """
+    *lead, rows, n = packed.shape
+    p = packed.astype(jnp.int32)
+    codes = [(p >> (2 * j)) & 0x3 for j in range(4)]
+    out = jnp.stack(codes, axis=-2)                # (..., rows, 4, n)
+    return out.reshape(*lead, rows * 4, n).astype(jnp.int8)
 
 
 def _expand_tile(vals, idx):
@@ -48,12 +78,14 @@ def _expand_tile(vals, idx):
     return dense.reshape(g * 4, bn)
 
 
-def _nm_matmul_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk):
+def _nm_matmul_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk,
+                      packed):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dense_w = _expand_tile(vals_ref[...], idx_ref[...])
+    idx = unpack_idx2(idx_ref[...]) if packed else idx_ref[...]
+    dense_w = _expand_tile(vals_ref[...], idx)
     acc_ref[...] += jnp.dot(x_ref[...], dense_w,
                             preferred_element_type=jnp.float32)
 
@@ -62,26 +94,51 @@ def _nm_matmul_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _infer_layout(K: int, idx_shape: tuple[int, ...]) -> str:
+    if idx_shape[0] * 2 == K:
+        return LAYOUT_INT8
+    if idx_shape[0] * 8 == K:
+        return LAYOUT_PACKED2
+    raise ValueError(f"index plane {idx_shape} matches no layout for K={K}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "layout", "interpret"))
 def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
               bm: int = 128, bk: int = 512, bn: int = 256,
+              layout: str | None = None,
               interpret: bool = False) -> jax.Array:
-    """x: (M, K) @ 2:4-compressed W (K, N) -> (M, N) in x.dtype."""
+    """x: (M, K) @ 2:4-compressed W (K, N) -> (M, N) in x.dtype.
+
+    layout: LAYOUT_INT8 (idx (K/2, N) int8) or LAYOUT_PACKED2 (idx (K/8, N)
+    uint8, consumed packed - no host-side unpack); None infers from shapes.
+    """
     M, K = x.shape
     halfK, N = vals.shape
-    assert halfK * 2 == K and idx.shape == (halfK, N), (x.shape, vals.shape)
+    assert halfK * 2 == K, (x.shape, vals.shape)
+    layout = _infer_layout(K, idx.shape) if layout is None else layout
+    packed = layout == LAYOUT_PACKED2
+    if packed:
+        assert K % 8 == 0 and idx.shape == (K // 8, N), (idx.shape, K, N)
+    else:
+        assert layout == LAYOUT_INT8 and idx.shape == (halfK, N), \
+            (layout, idx.shape)
     bm = min(bm, M)
     bk = min(bk, K)
     bn = min(bn, N)
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0 and bk % 4 == 0
+    idx_rows = 8 if packed else 2
+    # int8 tiles need whole 2:4 groups (bk % 4); packed tiles additionally
+    # need whole index bytes (bk % 8)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 \
+        and bk % (8 if packed else 4) == 0
     nk = K // bk
     return pl.pallas_call(
-        functools.partial(_nm_matmul_kernel, nk=nk),
+        functools.partial(_nm_matmul_kernel, nk=nk, packed=packed),
         grid=(M // bm, N // bn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
-            pl.BlockSpec((bk // 2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((bk // idx_rows, bn), lambda m, n, k: (k, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),

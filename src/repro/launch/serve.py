@@ -63,11 +63,14 @@ def _load_sparse(args, params):
         print("note: unstructured budget -> masked-dense serving "
               "(2:4-compressed execution needs the bank's N:M pattern)")
     sparse = bank.sparse_params(params, sparsity=args.sparsity,
-                                compressed=compressed)
+                                compressed=compressed,
+                                idx_bits=args.idx_bits)
     if compressed:
         rep = compressed_report(sparse)
         print(f"serving from bank {args.sparse_artifact}: "
-              f"{len(rep['layers'])} kernels 2:4-compressed, "
+              f"{len(rep['layers'])} kernels 2:4-compressed "
+              f"({args.idx_bits}-bit index storage, "
+              f"{rep['kernel_native_packed']} kernel-native packed planes), "
               f"{rep['bytes_compressed'] / 1e6:.2f} MB vs "
               f"{rep['bytes_dense_bf16'] / 1e6:.2f} MB dense bf16 "
               f"(ratio {rep['ratio']:.3f})")
@@ -95,6 +98,10 @@ def main(argv=None) -> None:
     ap.add_argument("--weight-format", default="compressed",
                     choices=["compressed", "masked"],
                     help="bank serving: 2:4-compressed kernels vs W0*M")
+    ap.add_argument("--idx-bits", type=int, default=2, choices=[2, 8],
+                    help="compressed index layout: 2 = packed 4-per-byte "
+                         "(kernel-native, 9/16 of dense bf16 bytes), "
+                         "8 = int8 fallback plane (3/4)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 

@@ -327,19 +327,24 @@ def ring_positions(t: jax.Array, capacity: int) -> jax.Array:
     """Position stored in each ring slot after writing token t at t%C.
 
     Slot j holds the latest position p <= t with p % C == j (or is empty,
-    encoded as p > t via a large value, never matches the mask).
+    encoded as p > t via a large value, never matches the mask).  t may be a
+    scalar (-> (C,)) or a per-row position vector (B,) (-> (B, C)), the
+    batched-decode case where every row sits at its own position.
     """
     j = jnp.arange(capacity)
-    p = t - jnp.mod(t - j, capacity)
-    return jnp.where(p >= 0, p, t + 1 + capacity)  # invalid -> masked out
+    tt = jnp.asarray(t, jnp.int32)[..., None]    # () -> (1,) | (B,) -> (B,1)
+    p = tt - jnp.mod(tt - j, capacity)           # broadcasts to (C,) | (B,C)
+    return jnp.where(p >= 0, p, tt + 1 + capacity)  # invalid -> masked out
 
 
 def decode_attend(q, cache_k, cache_v, kpos, t, *, attn_softcap=0.0,
                   scale=None, window=0, seq_sharded: bool = False):
     """One-token attention against a cache.
 
-    q: (B, H, D); cache_k/v: (B, C, K, D); kpos: (C,) global position of each
-    slot; t: current position (scalar).  Valid slots: kpos <= t and (window).
+    q: (B, H, D); cache_k/v: (B, C, K, D); kpos: global position of each
+    slot, (C,) shared across the batch or (B, C) per row; t: current
+    position, scalar or (B,) per row (fused batched decode).  Valid slots:
+    kpos <= t and (window).
     """
     B, H, D = q.shape
     K = cache_k.shape[2]
@@ -352,10 +357,13 @@ def decode_attend(q, cache_k, cache_v, kpos, t, *, attn_softcap=0.0,
                    preferred_element_type=jnp.float32) * scale
     if attn_softcap:
         s = cm.softcap(s, attn_softcap)
-    ok = kpos <= t
+    kb = kpos if kpos.ndim == 2 else kpos[None]             # (1|B, C)
+    tq = jnp.asarray(t, jnp.int32)
+    tb = tq[:, None] if tq.ndim == 1 else tq                # (B, 1) | ()
+    ok = kb <= tb
     if window:
-        ok &= t - kpos < window
-    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+        ok &= tb - kb < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
     s = constrain(s, "batch", "kv_heads", None, seq_ax)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -373,7 +381,9 @@ def attn_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
                       scale: float | None = None, seq_sharded: bool = False,
                       update_cache: bool = True, qkv_delta=None,
                       ) -> tuple[jax.Array, PyTree]:
-    """Decode one token. x: (B, 1, d); t: scalar index of this token."""
+    """Decode one token per row.  x: (B, 1, d); t: position of this token,
+    scalar (whole batch in lockstep) or (B,) (fused batched decode - each
+    row writes its own ring slot and masks at its own position)."""
     B, S, _ = x.shape
     assert S == 1
     C = cache["k"].shape[1]
@@ -384,18 +394,29 @@ def attn_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
     k = (cm.dense(p["wk"], x) + dk).reshape(B, 1, num_kv, head_dim)
     v = (cm.dense(p["wv"], x) + dv).reshape(B, 1, num_kv, head_dim)
     q, k = _qk_normed(p, q, k)
-    pos = jnp.full((B, 1), t, jnp.int32)
+    per_row = jnp.ndim(t) == 1
+    pos = (jnp.asarray(t, jnp.int32)[:, None] if per_row
+           else jnp.full((B, 1), t, jnp.int32))
     if use_rope:
         q = cm.rope(q, pos, theta=rope_theta)
         k = cm.rope(k, pos, theta=rope_theta)
     if update_cache:
         slot = ring_slot(t, C)
-        cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
-            "v": jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
-        }
+        if per_row:  # row b writes its own ring slot t[b] % C
+            rows = jnp.arange(B)
+            cache = {
+                "k": cache["k"].at[rows, slot].set(
+                    k[:, 0].astype(cache["k"].dtype)),
+                "v": cache["v"].at[rows, slot].set(
+                    v[:, 0].astype(cache["v"].dtype)),
+            }
+        else:
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+            }
     kpos = ring_positions(t, C)
     o = decode_attend(q[:, 0], cache["k"], cache["v"], kpos, t,
                       attn_softcap=attn_softcap, scale=scale, window=window,
@@ -461,27 +482,41 @@ def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
                      rope_dim: int = 64, v_dim: int = 128,
                      rope_theta: float = 1e4, seq_sharded: bool = False,
                      ) -> tuple[jax.Array, PyTree]:
-    """Absorbed-matmul decode: attention runs in the compressed c-space."""
+    """Absorbed-matmul decode: attention runs in the compressed c-space.
+
+    t: scalar or (B,) per-row positions (fused batched decode)."""
     B, S, _ = x.shape
     assert S == 1
     H = num_heads
     C = cache["ckv"].shape[1]
+    per_row = jnp.ndim(t) == 1
     q = cm.dense(p["wq"], x).reshape(B, 1, H, nope_dim + rope_dim)
     q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
-    pos = jnp.full((B, 1), t, jnp.int32)
+    pos = (jnp.asarray(t, jnp.int32)[:, None] if per_row
+           else jnp.full((B, 1), t, jnp.int32))
     q_rope = cm.rope(q_rope, pos, theta=rope_theta)[:, 0]  # (B,H,rope)
     ckr = cm.dense(p["w_dkv"], x)
     c_new = cm.rmsnorm(p["kv_norm"], ckr[..., :kv_lora])
     k_rope_new = cm.rope(ckr[..., kv_lora:][:, :, None, :], pos,
                          theta=rope_theta)[:, 0, 0]  # (B,rope)
     slot = ring_slot(t, C)
-    cache = {
-        "ckv": jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], c_new.astype(cache["ckv"].dtype), slot, axis=1),
-        "krope": jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope_new[:, None].astype(cache["krope"].dtype),
-            slot, axis=1),
-    }
+    if per_row:  # row b writes its own ring slot t[b] % C
+        rows = jnp.arange(B)
+        cache = {
+            "ckv": cache["ckv"].at[rows, slot].set(
+                c_new[:, 0].astype(cache["ckv"].dtype)),
+            "krope": cache["krope"].at[rows, slot].set(
+                k_rope_new.astype(cache["krope"].dtype)),
+        }
+    else:
+        cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], c_new.astype(cache["ckv"].dtype), slot, axis=1),
+            "krope": jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"],
+                k_rope_new[:, None].astype(cache["krope"].dtype),
+                slot, axis=1),
+        }
     # absorb W_uk into q: q_c (B,H,r)
     w_uk = cm.kernel_dense(p["w_uk"]).astype(jnp.float32).reshape(
         kv_lora, H, nope_dim)
@@ -494,8 +529,10 @@ def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
     s = s + jnp.einsum("bhr,bcr->bhc", q_rope.astype(jnp.bfloat16), krope,
                        preferred_element_type=jnp.float32)
     s = s * (nope_dim + rope_dim) ** -0.5
-    kpos = ring_positions(t, C)
-    s = jnp.where((kpos <= t)[None, None, :], s, NEG_INF)
+    kpos = ring_positions(t, C)                              # (C,) | (B,C)
+    kb = kpos if kpos.ndim == 2 else kpos[None]
+    tb = pos if per_row else jnp.asarray(t, jnp.int32)       # (B,1) | ()
+    s = jnp.where((kb <= tb)[:, None, :], s, NEG_INF)
     s = constrain(s, "batch", "heads", seq_ax)
     p_attn = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhc,bcr->bhr", p_attn.astype(jnp.bfloat16), ckv,

@@ -83,7 +83,10 @@ def dense(params: PyTree, x: jax.Array) -> jax.Array:
     k = params["kernel"]
     if isinstance(k, SparseTensor):
         # 2:4-compressed kernel (sparse.apply.sparsify_params): route through
-        # the compressed matmul.  No tape: sparse trees are serving-only.
+        # the compressed matmul.  The leaf's kernel_layout tag picks the
+        # index path - packed 2-bit planes stream to the Pallas kernel as
+        # stored (no host unpack), padded/int8 planes take the fallback.
+        # No tape: sparse trees are serving-only.
         from repro.sparse import apply as sparse_apply
         return sparse_apply.sparse_dense(k, x)
     from repro.core import tape as _tape

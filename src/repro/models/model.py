@@ -227,14 +227,21 @@ def prefill(cfg: ModelConfig, params: PyTree, batch: dict, *,
 
 def decode_step(cfg: ModelConfig, params: PyTree, token: jax.Array,
                 caches: list, t: jax.Array, *, seq_sharded: bool = False):
-    """One decode step. token: (B,) int32; t: scalar position index."""
+    """One decode step.  token: (B,) int32; t: position index - a scalar
+    (whole batch in lockstep) or a (B,) vector of per-row positions (the
+    serve engine's fused batched decode: one invocation advances every slot
+    at its own position, ring writes and attention masks row-local)."""
     batch = {"tokens": token[:, None]}
     x = cm.embed_lookup(params["embed"], batch["tokens"])
     if cfg.scale_embed:
         x = x * math.sqrt(cfg.d_model)
     if cfg.is_encoder_decoder:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["pos_embed"], t, 1, axis=0).astype(x.dtype)[None]
+        if jnp.ndim(t) == 1:
+            pe = jnp.take(params["pos_embed"], t, axis=0)[:, None]
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], t, 1, axis=0)[None]
+        x = x + pe.astype(x.dtype)
     shared = params.get("shared")
     new_caches = []
     for (pattern, repeats), sp, cache in zip(make_stages(cfg),

@@ -3,16 +3,25 @@
 Continuous batching over a fixed-slot KV cache: requests join free slots,
 prefill runs once per admitted request (one jitted chunked forward that
 fills the slot's cache rows), decode advances every slot one token per step
-in a single jitted call.  Decode is the per-row step function vmapped over
-slots, so each slot carries its own position ``t`` - cache writes and
-attention masks are slot-local by construction (a slot mid-generation never
-sees another slot's ring writes).  Finished slots (eos/max_tokens) free up.
+in a single jitted call.  Decode is ONE fused ``model.decode_step``
+invocation per step with the per-slot positions carried as an index vector
+- each slot writes its own cache ring slot and masks attention at its own
+position (row-local by construction, see ``attention.attn_apply_decode``),
+so a slot mid-generation never sees another slot's ring writes and new
+slots admit mid-batch without changing the traced computation.  The older
+per-slot vmapped step is kept behind ``decode_mode="vmap"`` as a parity
+oracle.  Slot admission writes cache rows through one jitted
+dynamic-index update (no per-slot recompiles, no host round-trip of the
+cache buffers).  Finished slots (eos/max_tokens) free up.
 
 Weights may be dense or 2:4-compressed (``sparse.apply.sparsify_params``):
 ``models.common.dense`` dispatches per leaf, so the same engine serves both;
 ``ServeEngine.from_artifact`` builds the sparse engine straight from a saved
 mask bank.  The engine is device-count-agnostic (1 CPU device in tests, the
-production mesh via the same jitted step functions).
+production mesh via the same jitted step functions); passing ``rules``
+(a ``dist.axes.ShardingRules``) places params - compressed SparseTensor
+leaves included, via ``dist.sharding.params_sharding`` - and KV caches onto
+the mesh before serving.
 """
 from __future__ import annotations
 
@@ -48,13 +57,24 @@ class ServeEngine:
     """Slot-based continuous batching (greedy decode)."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
-                 capacity: int = 512):
+                 capacity: int = 512, decode_mode: str = "fused",
+                 rules: Any = None):
         assert not cfg.is_encoder_decoder, "decoder-only engine"
+        assert decode_mode in ("fused", "vmap"), decode_mode
         self.cfg = cfg
-        self.params = params
         self.slots = slots
         self.capacity = capacity
-        self.caches = M.init_caches(cfg, slots, capacity)
+        self.decode_mode = decode_mode
+        self.rules = rules
+        caches = M.init_caches(cfg, slots, capacity)
+        if rules is not None:
+            from repro.dist import sharding as shd
+            params = jax.device_put(
+                params, shd.params_sharding(M.param_axes(cfg), params, rules))
+            caches = jax.device_put(
+                caches, shd.cache_sharding(caches, rules.mesh))
+        self.params = params
+        self.caches = caches
         self.pos = np.zeros((slots,), np.int32)       # next position per slot
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
@@ -67,26 +87,41 @@ class ServeEngine:
                           if cfg.sliding_window else capacity)
         self._prefill_fns: dict[int, Any] = {}
         self._blank_row = None  # lazily-built slot-reset template
+        # slot admission: one jitted dynamic-index row write (slot index is
+        # an operand, not a constant -> one compile covers every slot)
+        self._write_slot = jax.jit(lambda full, row, s: jax.tree.map(
+            lambda f, n: jax.lax.dynamic_update_index_in_dim(
+                f, n[:, 0], s, axis=1), full, row))
 
-        def _row_step(p, tok, cache_row, t):
-            """One slot's decode at its own position t (vmapped over slots)."""
-            caches = jax.tree.map(lambda a: a[:, None], cache_row)
-            logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
-            return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
+        if decode_mode == "vmap":
+            def _row_step(p, tok, cache_row, t):
+                """One slot's decode at its own position t (vmapped)."""
+                caches = jax.tree.map(lambda a: a[:, None], cache_row)
+                logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
+                return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
 
-        self._decode = jax.jit(jax.vmap(_row_step, in_axes=(None, 0, 1, 0),
-                                        out_axes=(0, 1)))
+            self._decode = jax.jit(jax.vmap(
+                _row_step, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
+        else:
+            # fused: one decode_step over all slots, per-slot positions as
+            # an index vector (no vmapped scan, no per-slot kernel launches)
+            self._decode = jax.jit(
+                lambda p, toks, caches, t: M.decode_step(cfg, p, toks,
+                                                         caches, t))
 
     @classmethod
     def from_artifact(cls, bank_dir, params0: Any, *,
                       sparsity: float | None = None, compressed: bool = True,
-                      slots: int = 4, capacity: int = 512) -> "ServeEngine":
+                      slots: int = 4, capacity: int = 512,
+                      decode_mode: str = "fused",
+                      rules: Any = None) -> "ServeEngine":
         """Engine over bank-derived sparse weights (no re-calibration)."""
         from repro.sparse.bank import MaskBank
         bank = MaskBank.load(bank_dir)
         params = bank.sparse_params(params0, sparsity=sparsity,
                                     compressed=compressed)
-        return cls(bank.cfg, params, slots=slots, capacity=capacity)
+        return cls(bank.cfg, params, slots=slots, capacity=capacity,
+                   decode_mode=decode_mode, rules=rules)
 
     # -- client API ----------------------------------------------------------
 
@@ -131,9 +166,10 @@ class ServeEngine:
 
         All prompt tokens but the last run through the prefill forward
         (bucketed to limit recompiles); the produced cache rows replace
-        slot s's rows wholesale.  Padding past the prompt is masked during
-        decode (kpos > t) and each junk ring slot is overwritten by the
-        real token before it could become visible.
+        slot s's rows wholesale through the jitted dynamic-index write.
+        Padding past the prompt is masked during decode (kpos > t) and each
+        junk ring slot is overwritten by the real token before it could
+        become visible.
         """
         n = len(req.prompt) - 1
         assert n < self.capacity, (n, self.capacity)
@@ -144,9 +180,7 @@ class ServeEngine:
             # ssm/xlstm state is not)
             if self._blank_row is None:
                 self._blank_row = M.init_caches(self.cfg, 1, self.capacity)
-            self.caches = jax.tree.map(
-                lambda full, blank: full.at[:, s].set(blank[:, 0]),
-                self.caches, self._blank_row)
+            row = self._blank_row
         else:
             bucket = self._prefill_bucket(n)
             fn = self._prefill_fns.get(bucket)
@@ -158,9 +192,7 @@ class ServeEngine:
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = req.prompt[:-1]
             row = fn(self.params, jnp.asarray(toks))
-            self.caches = jax.tree.map(
-                lambda full, new: full.at[:, s].set(new[:, 0]),
-                self.caches, row)
+        self.caches = self._write_slot(self.caches, row, jnp.int32(s))
         self.pos[s] = max(n, 0)
         req.pending_token = int(req.prompt[-1])
 

@@ -9,10 +9,14 @@ Three layers close the loop from UniPruning calibration to serving:
     For a dense kernel (..., K, N) pruned 2:4 along K it stores
     ``vals`` (..., K/2, N) in the serving compute dtype plus in-group
     positions, either int8 (``idx_bits=8``, (..., K/2, N)) or 2-bit-packed
-    uint8 (``idx_bits=2``, (..., K/8, N), the default - 4 positions per
-    byte).  bf16 HBM bytes: 9/16 of dense (2-bit) / 3/4 (int8).  Only
-    ``idx_bits`` is static, so ``lax.scan`` slices stacked layer kernels
-    through it transparently.
+    uint8 (``idx_bits=2``, (..., ceil(K/8), N), the default - 4 positions
+    per byte, zero-padded to the byte boundary when K % 8 != 0).  bf16 HBM
+    bytes: 9/16 of dense (2-bit) / 3/4 (int8).  The layout tag
+    (``LAYOUT_PACKED2``/``LAYOUT_INT8``) names the storage;
+    ``kernel_layout`` names what the kernel streams - packed planes with
+    K % 8 == 0 go to the Pallas kernel as stored and unpack in VMEM after
+    the HBM->VMEM copy.  Only ``idx_bits`` is static, so ``lax.scan``
+    slices stacked layer kernels through it transparently.
   - ``BitMask``: unstructured keep-masks packed 8-per-byte for artifact
     storage; unpacks to the boolean pytrees ``core/masks.py`` produces.
 
@@ -21,12 +25,15 @@ Three layers close the loop from UniPruning calibration to serving:
   (``unipruning.mask-bank/v1``, written by ``ckpt.save_artifact``): a
   directory with ``manifest.json`` + one ``leaf_NNNNNN.npy`` per non-None
   leaf, committed atomically via tmp-dir rename.  The manifest carries
-  ``metadata = {schema, arch, smoke, pcfg: asdict(PruneConfig), steps_run}``
-  and the saved tree is ``{"Gamma": <saliency>, "V": <dual>, "stats":
-  <activation norms>}``, each in the model's params structure (None on
-  non-prunable leaves).  ``MaskBank.load(dir).masks_at(sparsity | nm)``
-  re-thresholds via ``mirror.export_masks`` - bit-identical to an
-  in-process export, no re-search.
+  ``metadata = {schema, format_version, arch, smoke, pcfg:
+  asdict(PruneConfig), steps_run, checksum}`` and the saved tree is
+  ``{"Gamma": <saliency>, "V": <dual>, "stats": <activation norms>}``, each
+  in the model's params structure (None on non-prunable leaves).  The
+  crc32 ``checksum`` over every leaf (format_version >= 2) makes a
+  truncated or corrupt artifact fail loudly at load.
+  ``MaskBank.load(dir).masks_at(sparsity | nm)`` re-thresholds via
+  ``mirror.export_masks`` - bit-identical to an in-process export, no
+  re-search.
 
 * **Execution** (``apply``) - ``sparsify_params`` swaps 2:4-maskable
   kernels for ``SparseTensor`` leaves; ``models.common.dense`` dispatches

@@ -3,10 +3,14 @@
 ``models.common.dense`` dispatches on leaf type, so a params tree whose
 prunable kernels were replaced by :func:`sparsify_params` serves through the
 compressed kernel (Pallas on TPU, interpret mode on CPU) while every dense
-leaf keeps the existing path.  On CPU the whole GEMM runs as a single tile
-(interpret mode has no VMEM limit), which keeps the accumulation order
-identical to XLA's dense bf16 dot - sparse serving reproduces masked-dense
-serving token-for-token.
+leaf keeps the existing path.  The leaf's ``kernel_layout`` tag decides what
+the kernel streams: 2-bit-packed index planes (K % 8 == 0) go to the kernel
+*as stored* - the unpack happens inside the kernel after the HBM->VMEM copy,
+so there is no host-side ``unpacked_idx()`` round-trip on the serving path.
+Byte-padded planes (K % 8 != 0) and int8 storage take the int8 fallback.
+On CPU the whole GEMM runs as a single tile (interpret mode has no VMEM
+limit), which keeps the accumulation order identical to XLA's dense bf16
+dot - sparse serving reproduces masked-dense serving token-for-token.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.nm_spmm import nm_matmul
+from repro.kernels.nm_spmm import LAYOUT_INT8, LAYOUT_PACKED2, nm_matmul
 from repro.sparse import pack as pack_mod
 from repro.sparse.formats import SparseTensor
 
@@ -35,17 +39,33 @@ def _largest_block(dim: int, cap: int, mult: int = 1) -> int:
     return dim  # dim < mult: single block
 
 
-def _run_nm(x2: jax.Array, vals: jax.Array, idx: jax.Array) -> jax.Array:
+def _run_nm(x2: jax.Array, vals: jax.Array, idx: jax.Array, layout: str
+            ) -> jax.Array:
     m, k = x2.shape
     n = vals.shape[-1]
     if jax.default_backend() == "tpu":
         bn = (_largest_block(n, 256, 128) if n % 128 == 0
               else _largest_block(n, 256))
-        return nm_matmul(x2, vals, idx,
-                         bm=_largest_block(m, 128), bk=_largest_block(k, 512, 4),
-                         bn=bn)
+        # packed tiles must cover whole index bytes (8 dense rows/byte row)
+        bk_mult = 8 if layout == LAYOUT_PACKED2 else 4
+        return nm_matmul(x2, vals, idx, bm=_largest_block(m, 128),
+                         bk=_largest_block(k, 512, bk_mult), bn=bn,
+                         layout=layout)
     # interpret mode: one tile = one fp32 dot, bit-matching the dense path
-    return nm_matmul(x2, vals, idx, bm=m, bk=k, bn=n, interpret=True)
+    return nm_matmul(x2, vals, idx, bm=m, bk=k, bn=n, layout=layout,
+                     interpret=True)
+
+
+def _kernel_operand(st: SparseTensor) -> tuple[jax.Array, str]:
+    """Index plane + layout tag as the kernel consumes it.
+
+    Kernel-native packed storage ships the stored bytes untouched; padded
+    or int8 storage unpacks to the int8 fallback plane at dispatch.
+    """
+    layout = st.kernel_layout
+    if layout == LAYOUT_PACKED2:
+        return st.idx, layout
+    return st.unpacked_idx(), layout
 
 
 def sparse_dense(st: SparseTensor, x: jax.Array) -> jax.Array:
@@ -54,7 +74,8 @@ def sparse_dense(st: SparseTensor, x: jax.Array) -> jax.Array:
         "per-layer kernels only; stacked leaves are sliced by lax.scan")
     *lead, k = x.shape
     x2 = x.reshape(-1, k)
-    y = _run_nm(x2, st.vals.astype(x.dtype), st.unpacked_idx())
+    idx, layout = _kernel_operand(st)
+    y = _run_nm(x2, st.vals.astype(x.dtype), idx, layout)
     return y.reshape(*lead, st.shape[-1])
 
 
@@ -66,8 +87,16 @@ def sparse_dense2(st_a: SparseTensor, st_b: SparseTensor, x: jax.Array
     na, nb = st_a.shape[-1], st_b.shape[-1]
     x2 = x.reshape(-1, k)
     vals = jnp.concatenate([st_a.vals, st_b.vals], axis=-1).astype(x.dtype)
-    idx = jnp.concatenate([st_a.unpacked_idx(), st_b.unpacked_idx()], axis=-1)
-    y = _run_nm(x2, vals, idx)
+    if (st_a.kernel_layout == LAYOUT_PACKED2
+            and st_b.kernel_layout == LAYOUT_PACKED2):
+        # packed planes share the byte layout along K: concat stays packed
+        idx = jnp.concatenate([st_a.idx, st_b.idx], axis=-1)
+        layout = LAYOUT_PACKED2
+    else:
+        idx = jnp.concatenate(
+            [st_a.unpacked_idx(), st_b.unpacked_idx()], axis=-1)
+        layout = LAYOUT_INT8
+    y = _run_nm(x2, vals, idx, layout)
     return (y[:, :na].reshape(*lead, na), y[:, na:].reshape(*lead, nb))
 
 
@@ -106,12 +135,15 @@ def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
         path = jax.tree_util.keystr(kp)
         eff_ndim = w.ndim - (1 if _stacked(ax) else 0)
         k_dim = w.shape[-2]
-        bits = idx_bits if k_dim % 8 == 0 else 8
         compressible = (eff_ndim == 2 and k_dim % 4 == 0
                         and (predicate is None or predicate(path))
                         and _is_nm(mk))
         if compressible:
-            out.append(pack_mod.pack_nm(w, mk, idx_bits=bits, dtype=dtype))
+            # k_dim % 8 != 0 no longer widens to int8: the packed plane is
+            # zero-padded to the byte boundary instead (the kernel takes the
+            # int8 fallback there, but storage keeps the 2-bit byte win)
+            out.append(pack_mod.pack_nm(w, mk, idx_bits=idx_bits,
+                                        dtype=dtype))
         else:
             out.append(w * mk.astype(w.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -128,7 +160,13 @@ def _is_nm(mask: jax.Array, m: int = 4, n: int = 2) -> bool:
 
 
 def compressed_report(params: PyTree) -> dict:
-    """Per-leaf and total weight bytes: compressed vs dense-bf16 equivalent."""
+    """Per-leaf and total weight bytes: compressed vs dense-bf16 equivalent.
+
+    ``layout`` is the storage layout tag; ``kernel_layout`` is what the
+    matmul actually streams (a byte-padded packed plane executes through the
+    int8 fallback), so the bytes accounting stays honest: ``nbytes`` counts
+    the stored (padded) plane, never a phantom unpadded one.
+    """
     flat, _ = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=lambda x: isinstance(x, SparseTensor))
     layers = []
@@ -142,11 +180,15 @@ def compressed_report(params: PyTree) -> dict:
         d *= 2  # bf16 serving layout
         layers.append({"path": jax.tree_util.keystr(kp),
                        "shape": list(leaf.shape), "idx_bits": leaf.idx_bits,
+                       "layout": leaf.layout,
+                       "kernel_layout": leaf.kernel_layout,
                        "bytes_compressed": leaf.nbytes,
                        "bytes_dense_bf16": d,
                        "ratio": leaf.nbytes / d})
     comp = sum(r["bytes_compressed"] for r in layers)
     dense_eq = sum(r["bytes_dense_bf16"] for r in layers)
+    kernel_native = sum(r["kernel_layout"] == LAYOUT_PACKED2 for r in layers)
     return {"layers": layers, "bytes_compressed": comp,
             "bytes_dense_bf16": dense_eq,
+            "kernel_native_packed": kernel_native,
             "ratio": comp / dense_eq if dense_eq else None}

@@ -15,10 +15,12 @@ configuration; here a new budget is a quantile of a saved tensor.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import PruneConfig, get_config, get_smoke_config
@@ -26,10 +28,34 @@ from repro.configs.base import PruneConfig, get_config, get_smoke_config
 PyTree = Any
 
 SCHEMA = "unipruning.mask-bank/v1"
+# Artifact header version.  v1: no integrity fields (legacy, still loads).
+# v2: adds {format_version, checksum} - a truncated/bit-rotted leaf or an
+# artifact written by a newer format fails loudly at load instead of
+# silently re-thresholding to wrong masks.
+FORMAT_VERSION = 2
 
 
 def _cfg_for(arch: str, smoke: bool):
     return get_smoke_config(arch) if smoke else get_config(arch)
+
+
+def _tree_checksum(tree: PyTree) -> str:
+    """Order-stable crc32 over materialized leaves (path, dtype, shape,
+    bytes).  None leaves are skipped entirely - load rebuilds the tree
+    through the full params template, which expands a saved ``stats=None``
+    into a subtree of None leaves, so hashing None *structure* would reject
+    a valid artifact."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    crc = 0
+    for kp, leaf in flat:
+        if leaf is None:
+            continue
+        crc = zlib.crc32(jax.tree_util.keystr(kp).encode(), crc)
+        a = np.ascontiguousarray(np.asarray(leaf))
+        crc = zlib.crc32(f"{a.dtype}{a.shape}".encode(), crc)
+        crc = zlib.crc32(a.tobytes(), crc)
+    return f"{crc:08x}"
 
 
 def _params_template(cfg) -> PyTree:
@@ -61,11 +87,13 @@ class MaskBank:
              stats: PyTree = None, pcfg: PruneConfig,
              extra: dict | None = None) -> "MaskBank":
         """state: core.mirror.SearchState (or any object with Gamma/V)."""
-        meta = {"schema": SCHEMA, "arch": arch, "smoke": bool(smoke),
+        tree = {"Gamma": state.Gamma, "V": state.V, "stats": stats}
+        meta = {"schema": SCHEMA, "format_version": FORMAT_VERSION,
+                "arch": arch, "smoke": bool(smoke),
                 "pcfg": dataclasses.asdict(pcfg),
                 "steps_run": int(state.step) if hasattr(state, "step") else None,
+                "checksum": _tree_checksum(tree),
                 **(extra or {})}
-        tree = {"Gamma": state.Gamma, "V": state.V, "stats": stats}
         ckpt.save_artifact(directory, tree, metadata=meta)
         return cls(_cfg_for(arch, smoke), pcfg, state.Gamma, state.V,
                    stats, meta)
@@ -75,10 +103,24 @@ class MaskBank:
         probe = {"Gamma": 0}  # metadata first: the template needs the arch
         _, meta = ckpt.load_artifact(directory, probe)
         assert meta.get("schema") == SCHEMA, meta
+        version = meta.get("format_version", 1)
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"mask bank at {directory} has format_version {version}, "
+                f"this build reads <= {FORMAT_VERSION}: refusing a stale "
+                "reader on a newer artifact")
         cfg = _cfg_for(meta["arch"], meta["smoke"])
         tpl = _params_template(cfg)
         tree, _ = ckpt.load_artifact(
             directory, {"Gamma": tpl, "V": tpl, "stats": tpl})
+        if version >= 2:
+            got = _tree_checksum(tree)
+            if got != meta["checksum"]:
+                raise ValueError(
+                    f"mask bank at {directory} failed its integrity check "
+                    f"(stored {meta['checksum']}, recomputed {got}): "
+                    "artifact is truncated or corrupt, refusing to serve "
+                    "masks from it")
         to_dev = lambda t: jax.tree.map(
             lambda x: None if x is None else jnp.asarray(x), t,
             is_leaf=lambda x: x is None)

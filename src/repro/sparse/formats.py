@@ -4,10 +4,16 @@
 of 4 along the reduction dim, the two surviving values (``vals``,
 (..., K/2, N), compute dtype) and their in-group positions.  Positions are
 stored either as int8 (``idx_bits=8``: (..., K/2, N)) or packed 4-per-byte
-(``idx_bits=2``: (..., K/8, N) uint8), moving 9/16 of the dense-bf16 HBM
-bytes.  Registered as a pytree node whose only static data is ``idx_bits``,
-so ``lax.scan`` over stacked layer parameters slices the leading layer axis
-of ``vals``/``idx`` exactly like a dense kernel leaf.
+(``idx_bits=2``: (..., ceil(K/8), N) uint8, position rows zero-padded to
+the byte boundary when K % 8 != 0), moving 9/16 of the dense-bf16 HBM
+bytes.  The *layout tag* (:data:`LAYOUT_INT8` / :data:`LAYOUT_PACKED2`)
+names the storage; ``kernel_layout`` names what the matmul kernel streams:
+packed storage whose K divides 8 is consumed 2-bit-native by the Pallas
+kernel (unpacked HBM->VMEM inside the kernel), anything else falls back to
+an int8 index plane unpacked at dispatch.  Registered as a pytree node
+whose only static data is ``idx_bits``, so ``lax.scan`` over stacked layer
+parameters slices the leading layer axis of ``vals``/``idx`` exactly like a
+dense kernel leaf.
 
 ``BitMask``: 8-masks-per-byte storage format for unstructured keep-masks
 (bank artifacts); unpacks back to the boolean pytrees ``core/masks.py``
@@ -21,19 +27,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _unpack_idx2(packed: jax.Array) -> jax.Array:
-    """(..., K/8, N) uint8 -> (..., K/2, N) int8 in-group positions."""
-    *lead, rows, n = packed.shape
-    codes = [(packed >> (2 * j)) & 0x3 for j in range(4)]
-    out = jnp.stack(codes, axis=-2)                # (..., K/8, 4, N)
-    return out.reshape(*lead, rows * 4, n).astype(jnp.int8)
+# Layout tags and the 2-bit unpack are owned by the kernel module that
+# dispatches on / streams them (single source of truth for the bit layout):
+#   LAYOUT_INT8:    idx (..., K/2, N) int8, one position per byte
+#   LAYOUT_PACKED2: idx (..., ceil(K/8), N) uint8, 4 per byte
+from repro.kernels.nm_spmm import (  # noqa: F401
+    LAYOUT_INT8, LAYOUT_PACKED2, unpack_idx2 as _unpack_idx2)
 
 
 def _pack_idx2(idx: jax.Array) -> jax.Array:
-    """(..., K/2, N) int8 (values 0..3) -> (..., K/8, N) uint8."""
+    """(..., K/2, N) int8 (values 0..3) -> (..., ceil(K/8), N) uint8.
+
+    Position rows are zero-padded to the byte boundary when K % 8 != 0, so
+    any K % 4 == 0 kernel packs; the pad codes decode to position 0 and are
+    sliced off again by ``SparseTensor.unpacked_idx``.
+    """
     *lead, rows, n = idx.shape
-    assert rows % 4 == 0, f"2-bit packing needs K%8==0, got K/2={rows}"
+    pad = -rows % 4
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((*lead, pad, n), idx.dtype)], axis=-2)
+        rows += pad
     g = idx.astype(jnp.uint8).reshape(*lead, rows // 4, 4, n)
     out = jnp.zeros(g.shape[:-2] + (n,), jnp.uint8)
     for j in range(4):
@@ -78,11 +92,30 @@ class SparseTensor:
         return (int(np.prod(self.vals.shape)) * self.vals.dtype.itemsize
                 + int(np.prod(self.idx.shape)) * self.idx.dtype.itemsize)
 
+    @property
+    def layout(self) -> str:
+        """Storage layout tag for the index plane."""
+        return LAYOUT_PACKED2 if self.idx_bits == 2 else LAYOUT_INT8
+
+    @property
+    def kernel_layout(self) -> str:
+        """Layout the matmul kernel streams.
+
+        Packed storage is kernel-native only when K % 8 == 0 (no padding
+        rows inside a tile); a padded plane unpacks to int8 at dispatch.
+        """
+        if self.idx_bits == 2 and self.shape[-2] % 8 == 0:
+            return LAYOUT_PACKED2
+        return LAYOUT_INT8
+
     # -- conversions --------------------------------------------------------
 
     def unpacked_idx(self) -> jax.Array:
         """int8 (..., K/2, N) positions regardless of storage packing."""
-        return _unpack_idx2(self.idx) if self.idx_bits == 2 else self.idx
+        if self.idx_bits != 2:
+            return self.idx
+        half_k = self.vals.shape[-2]
+        return _unpack_idx2(self.idx)[..., :half_k, :]
 
     def to_dense(self) -> jax.Array:
         """Decompress to the dense (..., K, N) array (masked positions = 0)."""

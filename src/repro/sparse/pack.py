@@ -38,7 +38,8 @@ def pack_nm(w: jax.Array, mask: jax.Array, *, idx_bits: int = 8,
 
     dtype: storage dtype for the surviving values (e.g. the serving compute
     dtype); default keeps ``w.dtype``.  ``idx_bits=2`` packs positions
-    4-per-byte (needs K % 8 == 0).
+    4-per-byte; when K % 8 != 0 the packed plane is zero-padded to the byte
+    boundary (``SparseTensor.unpacked_idx`` slices the pad back off).
     """
     *lead, k, cols = w.shape
     idx = nm_positions(mask)

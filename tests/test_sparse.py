@@ -65,6 +65,49 @@ def test_nm_pack_stacked_layer_leaves():
                                   np.asarray(w * mask))
 
 
+def test_pack_pads_to_byte_boundary_instead_of_widening():
+    """K % 8 != 0 used to silently widen to int8 indices; now the packed
+    plane zero-pads to the byte boundary and storage stays 2-bit."""
+    w = jax.random.normal(jax.random.key(6), (12, 16), jnp.float32)
+    mask = kref.nm_mask_ref(w)
+    st = pack.pack_nm(w, mask, idx_bits=2)
+    assert st.idx_bits == 2 and st.layout == "packed2"
+    assert st.kernel_layout == "int8"  # padded plane -> dispatch fallback
+    assert st.idx.shape == (2, 16)     # ceil((12/2)/4) byte rows
+    np.testing.assert_array_equal(np.asarray(st.to_dense()),
+                                  np.asarray(w * mask))
+    # execution still matches masked-dense through the fallback
+    x = 0.1 * jax.random.normal(jax.random.key(7), (4, 12), jnp.float32)
+    y = apply_mod.sparse_dense(st, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ (w * mask)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sparsify_params_keeps_2bit_on_odd_k():
+    w = jax.random.normal(jax.random.key(8), (12, 16), jnp.float32)
+    mask = kref.nm_mask_ref(w)
+    sp = apply_mod.sparsify_params({"kernel": w}, {"kernel": mask},
+                                   idx_bits=2)
+    st = sp["kernel"]
+    assert isinstance(st, formats.SparseTensor) and st.idx_bits == 2
+    rep = apply_mod.compressed_report(sp)
+    (layer,) = rep["layers"]
+    assert layer["layout"] == "packed2"
+    assert layer["kernel_layout"] == "int8"
+    assert rep["kernel_native_packed"] == 0
+    # honest bytes: f32 vals + the padded packed plane actually stored
+    assert layer["bytes_compressed"] == 6 * 16 * 4 + 2 * 16
+
+
+def test_kernel_layout_tags():
+    w = jax.random.normal(jax.random.key(9), (64, 32), jnp.float32)
+    mask = kref.nm_mask_ref(w)
+    st2 = pack.pack_nm(w, mask, idx_bits=2)
+    st8 = pack.pack_nm(w, mask, idx_bits=8)
+    assert (st2.layout, st2.kernel_layout) == ("packed2", "packed2")
+    assert (st8.layout, st8.kernel_layout) == ("int8", "int8")
+
+
 def test_bitmask_roundtrip():
     key = jax.random.key(5)
     for shape in [(33, 7), (64, 128), (5,)]:
@@ -169,6 +212,91 @@ def test_bank_sparse_params_serve(calibrated, tmp_path):
     rid = eng.submit(np.array([3, 1, 4, 1, 5]), 4)
     out = eng.run()[rid]
     assert len(out) == 4
+
+
+def test_bank_saved_without_stats_loads_clean(calibrated, tmp_path):
+    """The checksum must be structure-insensitive: load rebuilds the tree
+    through the full params template, expanding a saved stats=None into a
+    subtree of None leaves; a valid artifact must not read as corrupt."""
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank_nostats"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state, pcfg=pcfg)
+    bank = MaskBank.load(d)
+    _tree_eq(bank.Gamma, state.Gamma)
+    assert all(x is None for x in jax.tree.leaves(
+        bank.stats, is_leaf=lambda x: x is None))
+
+
+def test_bank_corrupt_leaf_fails_loudly(calibrated, tmp_path):
+    """A truncated/bit-rotted artifact must refuse to load (checksum)."""
+    import glob
+    import pathlib
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    f = pathlib.Path(sorted(glob.glob(str(d / "leaf_*.npy")))[2])
+    raw = bytearray(f.read_bytes())
+    raw[-4] ^= 0xFF
+    f.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="integrity"):
+        MaskBank.load(d)
+
+
+def test_bank_newer_format_version_fails_loudly(calibrated, tmp_path):
+    import json
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    mf = d / "manifest.json"
+    m = json.loads(mf.read_text())
+    m["metadata"]["format_version"] = 99
+    mf.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="format_version"):
+        MaskBank.load(d)
+
+
+# -- fused batched decode ---------------------------------------------------
+
+def test_fused_decode_matches_vmapped_scan_with_midbatch_admission(
+        nm_masks_tree):
+    """One fused decode invocation with a per-slot position vector must be
+    token-identical to the legacy per-slot vmapped scan, including requests
+    admitted mid-batch while other slots are mid-generation."""
+    params, masks = nm_masks_tree
+    sp = apply_mod.sparsify_params(params, masks, axes=M.param_axes(CFG),
+                                   idx_bits=2, dtype=jnp.bfloat16)
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11]),
+               np.array([1, 2]), np.array([12, 13, 14, 15, 16])]
+    lens = [6, 3, 5, 4]
+    outs = {}
+    for mode in ("fused", "vmap"):
+        # 4 requests into 2 slots: the 3rd and 4th join mid-batch
+        eng = ServeEngine(CFG, sp, slots=2, capacity=32, decode_mode=mode)
+        rids = [eng.submit(p, n) for p, n in zip(prompts, lens)]
+        res = eng.run()
+        outs[mode] = [res[r] for r in rids]
+    assert outs["fused"] == outs["vmap"]
+    assert [len(o) for o in outs["fused"]] == lens
+
+
+def test_decode_step_vector_positions_match_scalar():
+    """decode_step with a constant position vector equals the scalar path
+    (same ring writes, same masks) - the fused engine's correctness core."""
+    params = M.init_params(CFG, jax.random.key(1))
+    B, P, cap = 2, 6, 16
+    from repro.data.synthetic import batches_for
+    batch = {k: jnp.asarray(v) for k, v in
+             batches_for(CFG, n=1, batch=B, seq=P, split="valid")[0].items()}
+    _, caches = M.prefill(CFG, params, batch, cache_capacity=cap)
+    tok = jnp.array([3, 4], jnp.int32)
+    lg_s, c_s = M.decode_step(CFG, params, tok, caches,
+                              jnp.asarray(P, jnp.int32))
+    lg_v, c_v = M.decode_step(CFG, params, tok, caches,
+                              jnp.full((B,), P, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    _tree_eq(c_s, c_v)
 
 
 # -- engine prefill semantics ----------------------------------------------
