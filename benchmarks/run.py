@@ -3,10 +3,13 @@
 Prints each table and a final ``name,us_per_call,derived`` CSV summary;
 writes structured results to results/bench/results.json.
 
-``--smoke`` runs only the serve-path bench (CI gate): it must produce
-``results/bench/BENCH_serve.json`` with a compressed weight-byte ratio at
-or under the 2-bit-packed bound of 9/16, token parity vs masked-dense, and
-fused-vs-vmapped engine token parity - and exits non-zero otherwise.
+``--smoke`` runs only the serve-path benches (CI gate): the dense-FFN bench
+must produce ``results/bench/BENCH_serve.json`` with a compressed
+weight-byte ratio at or under the 2-bit-packed bound of 9/16, token parity
+vs masked-dense, and fused-vs-vmapped engine token parity; the MoE bench
+must produce ``results/bench/BENCH_serve_moe.json`` with every expert bank
+kernel-native packed (zero masked-dense fallbacks), the same 9/16 bound,
+and the same token parities - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
@@ -31,7 +34,26 @@ def smoke() -> None:
         "compressed decode diverged from masked-dense"
     assert result["engine_tokens_match_fused_vs_vmap"], \
         "fused engine decode diverged from the vmapped scan"
-    print(f"smoke ok: wrote {path} (ratio {ratio:.4f})")
+
+    moe = table8_inference.serve_bench_moe(rows)
+    moe_path = table8_inference.write_serve_json(
+        moe, name="BENCH_serve_moe.json")
+    assert moe_path.exists(), moe_path
+    moe_ratio = moe["weight_bytes_ratio"]
+    assert moe_ratio is not None and moe_ratio <= 9 / 16 + 1e-9, (
+        f"MoE compressed weight-byte ratio {moe_ratio} exceeds the "
+        "2-bit-packed bound 9/16")
+    assert moe["expert_leaves"] and moe["expert_kernel_native"], \
+        "MoE expert banks are not executing kernel-native packed"
+    assert moe["fallback_leaves"] == 0, (
+        f"{moe['fallback_leaves']} pruned leaves fell back to masked-dense")
+    assert moe["tokens_match_masked_dense"], \
+        "MoE compressed decode diverged from masked-dense"
+    assert moe["engine_tokens_match_fused_vs_vmap"], \
+        "MoE fused engine decode diverged from the vmapped scan"
+    print(f"smoke ok: wrote {path} (ratio {ratio:.4f}) and {moe_path} "
+          f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
+          "kernel-native)")
 
 
 def main() -> None:
@@ -62,6 +84,10 @@ def main() -> None:
     serve_rows = [r for r in rows if r.get("table") == "serve"]
     if serve_rows:  # sparse-serving trajectory, tracked per PR
         table8_inference.write_serve_json(serve_rows[0])
+    moe_rows = [r for r in rows if r.get("table") == "serve_moe"]
+    if moe_rows:
+        table8_inference.write_serve_json(moe_rows[0],
+                                          name="BENCH_serve_moe.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

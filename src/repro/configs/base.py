@@ -64,6 +64,9 @@ class ModelConfig:
     act: str = "silu"
     use_rope: bool = True
     norm_eps: float = 1e-6
+    # serving: end-of-sequence token id terminating a decode slot
+    # (None -> generation stops on max_tokens only)
+    eos_id: int | None = None
 
     def __post_init__(self):
         if self.head_dim == 0:

@@ -36,16 +36,29 @@ class StatsTape:
     def __init__(self):
         # id(kernel) -> (pathstr, layer_idx)
         self.registry: dict[int, tuple[str, int]] = {}
-        # (pathstr, layer_idx) -> [sumsq fp64, count]
-        self.sumsq: dict[tuple[str, int], list] = {}
+        # (pathstr, layer_idx) -> sumsq fp64, shape kernel.shape[:-1]
+        self.sumsq: dict[tuple[str, int], np.ndarray] = {}
 
     def register_layer(self, tree: Any, prefix: str, layer_idx: int) -> None:
         for pathstr, leaf in _paths(tree):
             if isinstance(leaf, (jax.Array, np.ndarray)):
                 self.registry[id(leaf)] = (prefix + pathstr, layer_idx)
 
-    def record(self, kernel, x) -> None:
-        """Accumulate stats with shape kernel.shape[:-1]."""
+    def record(self, kernel, x, *, count=None, ref_count=None) -> None:
+        """Accumulate stats with shape kernel.shape[:-1].
+
+        count / ref_count: actual contributing rows per leading-dim entry
+        and the reference token count of the pass.  MoE dispatch buffers are
+        capacity-padded with zero rows, so the summed-axes size G*C is NOT
+        the sample size; the caller passes the per-expert routed-row counts
+        (an array broadcast against the leading stat dims) plus the token
+        count T of the batch, and the accumulated sum of squares is rescaled
+        by ref_count / count.  The resolved ||X_j||_2 then reads as the RMS
+        over actually-routed rows scaled to the same token count a dense-FFN
+        layer sees - without it, per-expert saliency is systematically
+        diluted under one global budget simply because each expert receives
+        ~T*k/E of the tokens.  Experts that received nothing stay at 0.
+        """
         key = self.registry.get(id(kernel))
         if key is None:
             return
@@ -53,13 +66,14 @@ class StatsTape:
         axes = tuple(range(nlead, x.ndim - 1))
         ss = np.asarray(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes),
                         np.float64)
-        n = int(np.prod([x.shape[a] for a in axes])) if axes else 1
-        ent = self.sumsq.get(key)
-        if ent is None:
-            self.sumsq[key] = [ss, n]
+        if count is not None:
+            c = np.asarray(count, np.float64)
+            scale = float(ref_count) / np.maximum(c, 1.0)
+            ss = ss * scale.reshape(scale.shape + (1,) * (ss.ndim - c.ndim))
+        if key in self.sumsq:
+            self.sumsq[key] = self.sumsq[key] + ss
         else:
-            ent[0] += ss
-            ent[1] += n
+            self.sumsq[key] = ss
 
 
 def current_tape() -> StatsTape | None:
@@ -85,10 +99,8 @@ def resolve_stats(tape: StatsTape, params: Any) -> Any:
     layer axis back.  Unseen leaves -> None.
     """
     by_path: dict[str, dict[int, np.ndarray]] = {}
-    counts: dict[str, dict[int, int]] = {}
-    for (pathstr, layer_idx), (ss, n) in tape.sumsq.items():
+    for (pathstr, layer_idx), ss in tape.sumsq.items():
         by_path.setdefault(pathstr, {})[layer_idx] = ss
-        counts.setdefault(pathstr, {})[layer_idx] = n
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []

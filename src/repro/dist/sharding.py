@@ -9,10 +9,15 @@ Compressed leaves (``sparse.formats.SparseTensor`` / ``BitMask``) shard too:
 a SparseTensor standing in for a dense (K, N) kernel inherits the dense
 kernel's logical axes - ``vals`` (K/2, N) and ``idx`` (K/2 or K/8, N) both
 take the N-axis sharding, and keep the K-axis sharding whenever the halved
-(vals) / packed-eighthed (idx) dim still divides the mesh axes.  BitMask
-bits are a flat byte buffer with no meaningful axis: replicated.  So a
-MaskBank-loaded compressed tree placed with ``params_sharding`` serves under
-the production mesh instead of replicating every sparse leaf.
+(vals) / packed-eighthed (idx) dim still divides the mesh axes.  Expert-
+banked leaves ((E, K, N) per layer step, possibly under a leading "layers"
+scan axis) carry the expert dim through unchanged: only the trailing two
+dims are compressed, so the leading "experts" logical axis maps onto its
+mesh axes exactly as for the dense bank, with the (K, N) component rules
+applying per expert.  BitMask bits are a flat byte buffer with no
+meaningful axis: replicated.  So a MaskBank-loaded compressed tree placed
+with ``params_sharding`` serves under the production mesh instead of
+replicating every sparse leaf.
 """
 from __future__ import annotations
 
@@ -46,8 +51,10 @@ def sparse_leaf_sharding(axes_str: str | None, st: SparseTensor,
                          rules: ShardingRules) -> SparseTensor:
     """Sharding for one SparseTensor leaf, as a matching pytree node.
 
-    Both components reuse the dense kernel's logical axis names (the leading
-    "layers" axis of stacked leaves included); only the divisibility check
+    Both components reuse the dense kernel's logical axis names (leading
+    "layers" / "experts" axes of stacked and expert-banked leaves included -
+    compression only halves/packs the trailing (K, N) dims, so every leading
+    axis keeps the dense mapping verbatim); only the divisibility check
     sees the component's actual shape, so the K-dim sharding survives
     exactly when K/2 (vals) resp. K/2-or-K/8 (idx) still divides the mapped
     mesh axes.  Returned as a SparseTensor of NamedShardings so the tree is

@@ -25,6 +25,11 @@ Block tiling: (bm x bk) @ (bk x bn) with compressed operand tiles
 (bk/2 x bn) vals and (bk/2 x bn | bk/8 x bn) idx; K is the innermost
 (arbitrary) grid dim accumulating into an f32 VMEM scratch, flushed to the
 output on the last K step.
+
+MoE expert banks (E, K, N) pruned 2:4 along K use ``nm_matmul_expert``: the
+same compressed tiles gain a leading expert axis and the grid a leading
+(parallel) expert dimension, so per-expert GEMMs over the dispatch buffer
+stream each expert's 9/16 bytes without a masked-dense fallback.
 """
 from __future__ import annotations
 
@@ -95,9 +100,9 @@ def _nm_matmul_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk,
 
 
 def _infer_layout(K: int, idx_shape: tuple[int, ...]) -> str:
-    if idx_shape[0] * 2 == K:
+    if idx_shape[-2] * 2 == K:
         return LAYOUT_INT8
-    if idx_shape[0] * 8 == K:
+    if idx_shape[-2] * 8 == K:
         return LAYOUT_PACKED2
     raise ValueError(f"index plane {idx_shape} matches no layout for K={K}")
 
@@ -145,5 +150,81 @@ def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, vals, idx)
+
+
+# ---------------------------------------------------------------------------
+# Expert-banked variant (MoE)
+# ---------------------------------------------------------------------------
+
+def _nm_matmul_expert_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk,
+                             packed):
+    """Same tile math as ``_nm_matmul_kernel``; the grid grew a leading
+    expert dim so every ref carries a size-1 expert block (sliced off with
+    [0]).  One (bm x bn) f32 accumulator per (e, m, n) program."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = unpack_idx2(idx_ref[0]) if packed else idx_ref[0]
+    dense_w = _expand_tile(vals_ref[0], idx)
+    acc_ref[...] += jnp.dot(x_ref[0], dense_w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "layout", "interpret"))
+def nm_matmul_expert(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
+                     bm: int = 128, bk: int = 512, bn: int = 256,
+                     layout: str | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Per-expert batch x: (E, M, K) @ 2:4-compressed bank (E, K, N)
+    -> (E, M, N) in x.dtype.
+
+    The compressed operands carry a leading expert axis - vals (E, K/2, N),
+    idx (E, K/2, N) int8 | (E, K/8, N) uint8 - and the grid grows a leading
+    (parallel) expert dimension, so each program streams one expert's
+    compressed tiles HBM->VMEM and runs the same VMEM shift/mask unpack +
+    in-register expand as the 2-D kernel.  MoE dispatch buffers (G, E, C, d)
+    reshape to (E, G*C, d) and route through here (see
+    ``sparse.apply.sparse_moe_dense``).
+    """
+    E, M, K = x.shape
+    Ev, halfK, N = vals.shape
+    assert Ev == E and halfK * 2 == K, (x.shape, vals.shape)
+    layout = _infer_layout(K, idx.shape) if layout is None else layout
+    packed = layout == LAYOUT_PACKED2
+    if packed:
+        assert K % 8 == 0 and idx.shape == (E, K // 8, N), (idx.shape, K, N)
+    else:
+        assert layout == LAYOUT_INT8 and idx.shape == (E, halfK, N), \
+            (layout, idx.shape)
+    bm = min(bm, M)
+    bk = min(bk, K)
+    bn = min(bn, N)
+    idx_rows = 8 if packed else 2
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0 \
+        and bk % (8 if packed else 4) == 0
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_nm_matmul_expert_kernel, nk=nk, packed=packed),
+        grid=(E, M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, bk // 2, bn), lambda e, m, n, k: (e, k, n)),
+            pl.BlockSpec((1, bk // idx_rows, bn),
+                         lambda e, m, n, k: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(x, vals, idx)

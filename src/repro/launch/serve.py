@@ -62,15 +62,18 @@ def _load_sparse(args, params):
     if args.weight_format == "compressed" and not compressed:
         print("note: unstructured budget -> masked-dense serving "
               "(2:4-compressed execution needs the bank's N:M pattern)")
-    sparse = bank.sparse_params(params, sparsity=args.sparsity,
-                                compressed=compressed,
-                                idx_bits=args.idx_bits)
+    sparse, masks = bank.sparse_params(params, sparsity=args.sparsity,
+                                       compressed=compressed,
+                                       idx_bits=args.idx_bits,
+                                       with_masks=True)
     if compressed:
-        rep = compressed_report(sparse)
+        rep = compressed_report(sparse, masks)
+        n_comp = sum(not l["fallback"] for l in rep["layers"])
         print(f"serving from bank {args.sparse_artifact}: "
-              f"{len(rep['layers'])} kernels 2:4-compressed "
+              f"{n_comp} kernels 2:4-compressed "
               f"({args.idx_bits}-bit index storage, "
-              f"{rep['kernel_native_packed']} kernel-native packed planes), "
+              f"{rep['kernel_native_packed']} kernel-native packed planes, "
+              f"{rep['fallback_leaves']} masked-dense fallbacks), "
               f"{rep['bytes_compressed'] / 1e6:.2f} MB vs "
               f"{rep['bytes_dense_bf16'] / 1e6:.2f} MB dense bf16 "
               f"(ratio {rep['ratio']:.3f})")

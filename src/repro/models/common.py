@@ -23,6 +23,13 @@ PyTree = Any
 COMPUTE_DTYPE = jnp.bfloat16
 PARAM_DTYPE = jnp.float32
 
+# shard_map was promoted out of experimental in jax 0.5.x; 0.4.x only has
+# the old path.  Shared here so every call site (moe dispatch/combine,
+# slstm scan) resolves the same symbol.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
 
 class Builder:
     """Single-definition parameter structure builder."""
@@ -94,6 +101,23 @@ def dense(params: PyTree, x: jax.Array) -> jax.Array:
     if t is not None:
         t.record(k, x)
     return x @ k.astype(COMPUTE_DTYPE)
+
+
+def expert_dense(params: PyTree, buf: jax.Array) -> jax.Array:
+    """Expert-banked FFN matmul: MoE dispatch buffer (G, E, C, d_in) against
+    an (E, d_in, d_out) kernel -> (G, E, C, d_out).
+
+    The expert-bank sibling of :func:`dense`: compressed banks
+    (``sparsify_params`` leaves the leading expert axis in the SparseTensor)
+    route through the expert-grid ``nm_matmul_expert`` kernel; dense banks
+    keep the einsum.  No tape here - ``moe_apply`` records the dispatch
+    buffer itself, with routed-token counts.
+    """
+    k = params["kernel"]
+    if isinstance(k, SparseTensor):
+        from repro.sparse import apply as sparse_apply
+        return sparse_apply.sparse_moe_dense(k, buf)
+    return jnp.einsum("gecd,edf->gecf", buf, k.astype(COMPUTE_DTYPE))
 
 
 def kernel_dense(params: PyTree) -> jax.Array:

@@ -4,6 +4,12 @@ Dispatch is gather/scatter (argfree cumsum positioning), NOT one-hot einsum,
 so compiled HLO FLOPs reflect the true active-expert compute (important for
 the roofline's MODEL_FLOPS / HLO_FLOPS ratio).
 
+Expert banks execute through ``common.expert_dense``: 2:4-compressed
+SparseTensor banks (``sparse.apply.sparsify_params``) run the expert-grid
+``nm_matmul_expert`` kernel over the dispatch buffer, dense banks keep the
+einsum.  During calibration the stats tape records the dispatch buffer with
+per-expert routed-token counts so capacity padding never dilutes saliency.
+
 Sharding: if num_experts divides the `model` axis the expert dim is
 expert-parallel ("experts" logical axis); otherwise each expert's hidden dim
 is tensor-parallel ("mlp").
@@ -18,6 +24,7 @@ import jax.numpy as jnp
 from repro.dist.axes import constrain
 from repro.models import common as cm
 from repro.models.common import Builder
+
 
 PyTree = Any
 
@@ -112,7 +119,7 @@ def moe_apply(p: PyTree, x: jax.Array, *, top_k: int,
 
     if mesh is not None:
         from jax.sharding import PartitionSpec as P
-        dispatch_local = jax.shard_map(
+        dispatch_local = cm.shard_map(
             dispatch_local, mesh=mesh,
             in_specs=(P(batch_axes, None, None), P(batch_axes, None)),
             out_specs=(P(batch_axes, None, None, None), P(batch_axes, None),
@@ -123,15 +130,23 @@ def moe_apply(p: PyTree, x: jax.Array, *, top_k: int,
     from repro.core import tape as _tape
     t = _tape.current_tape()
     if t is not None:  # per-(expert, input-feature) activation stats
-        t.record(p["up"]["kernel"], buf.swapaxes(0, 1))   # (E, G, C, d)
-        t.record(p["gate"]["kernel"], buf.swapaxes(0, 1))
-    up = p["up"]["kernel"].astype(cm.COMPUTE_DTYPE)
-    gate = p["gate"]["kernel"].astype(cm.COMPUTE_DTYPE)
-    down = p["down"]["kernel"].astype(cm.COMPUTE_DTYPE)
+        # The capacity buffer is zero-padded (unfilled slots, dropped
+        # tokens): zeros add nothing to the sum of squares, but the
+        # per-expert sample size is the routed-row count, not G*C - record
+        # it so the stat renormalizes to the T tokens a dense-FFN layer
+        # sees instead of reading diluted under one global budget.
+        routed = jnp.sum(e_idx[..., None] == jnp.arange(E), axis=(0, 1))
+        t.record(p["up"]["kernel"], buf.swapaxes(0, 1),   # (E, G, C, d)
+                 count=routed, ref_count=T)
+        t.record(p["gate"]["kernel"], buf.swapaxes(0, 1),
+                 count=routed, ref_count=T)
     f_ax = None if expert_sharded else "mlp"
     e_ax = "experts" if expert_sharded else None
-    h = jnp.einsum("gecd,edf->gecf", buf, up)
-    g = jnp.einsum("gecd,edf->gecf", buf, gate)
+    # expert_dense dispatches on the bank leaf type: compressed SparseTensor
+    # banks run the expert-grid nm_matmul_expert kernel over the dispatch
+    # buffer, dense banks keep the einsum
+    h = cm.expert_dense(p["up"], buf)
+    g = cm.expert_dense(p["gate"], buf)
     if act == "silu":
         g = jax.nn.silu(g)
     else:
@@ -139,8 +154,9 @@ def moe_apply(p: PyTree, x: jax.Array, *, top_k: int,
     h = h * g
     h = constrain(h, "batch", e_ax, None, f_ax)
     if t is not None:
-        t.record(p["down"]["kernel"], h.swapaxes(0, 1))
-    out_buf = jnp.einsum("gecf,efd->gecd", h, down)
+        t.record(p["down"]["kernel"], h.swapaxes(0, 1),
+                 count=routed, ref_count=T)
+    out_buf = cm.expert_dense(p["down"], h)
     out_buf = constrain(out_buf, "batch", None, None, None)
 
     def combine_local(out_buf_l, e_idx_l, p_idx_l, keep_l, gate_l):
@@ -154,7 +170,7 @@ def moe_apply(p: PyTree, x: jax.Array, *, top_k: int,
 
     if mesh is not None:
         from jax.sharding import PartitionSpec as P
-        combine_local = jax.shard_map(
+        combine_local = cm.shard_map(
             combine_local, mesh=mesh,
             in_specs=(P(batch_axes, None, None, None), P(batch_axes, None),
                       P(batch_axes, None), P(batch_axes, None),

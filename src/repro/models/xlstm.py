@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.models import common as cm
 from repro.models.common import Builder
 
+
 PyTree = Any
 
 
@@ -335,7 +336,7 @@ def slstm_core(p: PyTree, gates_in: jax.Array, state: PyTree, *,
     if wrap is not None:
         from jax.sharding import PartitionSpec as P
         bsp = P(axis_names, None, None)
-        fn = jax.shard_map(core_fn, mesh=wrap,
+        fn = cm.shard_map(core_fn, mesh=wrap,
                            in_specs=(bsp, (bsp,) * 4, P(None, None, None)),
                            out_specs=(bsp, (bsp,) * 4))
     h, (c, n, m, h_last) = fn(gates_in.astype(jnp.float32), init,

@@ -12,7 +12,10 @@ slots admit mid-batch without changing the traced computation.  The older
 per-slot vmapped step is kept behind ``decode_mode="vmap"`` as a parity
 oracle.  Slot admission writes cache rows through one jitted
 dynamic-index update (no per-slot recompiles, no host round-trip of the
-cache buffers).  Finished slots (eos/max_tokens) free up.
+cache buffers).  Finished slots free up on max_tokens or on emitting the
+eos token (``cfg.eos_id`` / the engine's ``eos_id`` override; the eos is
+included in the request's output) and are reused by queued requests
+mid-batch.
 
 Weights may be dense or 2:4-compressed (``sparse.apply.sparsify_params``):
 ``models.common.dense`` dispatches per leaf, so the same engine serves both;
@@ -58,7 +61,7 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  capacity: int = 512, decode_mode: str = "fused",
-                 rules: Any = None):
+                 rules: Any = None, eos_id: int | None = None):
         assert not cfg.is_encoder_decoder, "decoder-only engine"
         assert decode_mode in ("fused", "vmap"), decode_mode
         self.cfg = cfg
@@ -66,6 +69,9 @@ class ServeEngine:
         self.capacity = capacity
         self.decode_mode = decode_mode
         self.rules = rules
+        # eos terminates a slot mid-generation (the emitted eos is included
+        # in the request's output); None falls back to the model config's id
+        self.eos_id = cfg.eos_id if eos_id is None else eos_id
         caches = M.init_caches(cfg, slots, capacity)
         if rules is not None:
             from repro.dist import sharding as shd
@@ -114,14 +120,15 @@ class ServeEngine:
                       sparsity: float | None = None, compressed: bool = True,
                       slots: int = 4, capacity: int = 512,
                       decode_mode: str = "fused",
-                      rules: Any = None) -> "ServeEngine":
+                      rules: Any = None,
+                      eos_id: int | None = None) -> "ServeEngine":
         """Engine over bank-derived sparse weights (no re-calibration)."""
         from repro.sparse.bank import MaskBank
         bank = MaskBank.load(bank_dir)
         params = bank.sparse_params(params0, sparsity=sparsity,
                                     compressed=compressed)
         return cls(bank.cfg, params, slots=slots, capacity=capacity,
-                   decode_mode=decode_mode, rules=rules)
+                   decode_mode=decode_mode, rules=rules, eos_id=eos_id)
 
     # -- client API ----------------------------------------------------------
 
@@ -213,9 +220,10 @@ class ServeEngine:
             tok = int(nxt[s])
             req.out.append(tok)
             req.pending_token = tok
-            if len(req.out) >= req.max_tokens:
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if hit_eos or len(req.out) >= req.max_tokens:
                 req.done = True
                 finished.append(req)
-                self.active[s] = None
+                self.active[s] = None   # freed: _admit reuses it next step
                 self.pos[s] = 0
         return finished

@@ -3,7 +3,10 @@
 ``models.common.dense`` dispatches on leaf type, so a params tree whose
 prunable kernels were replaced by :func:`sparsify_params` serves through the
 compressed kernel (Pallas on TPU, interpret mode on CPU) while every dense
-leaf keeps the existing path.  The leaf's ``kernel_layout`` tag decides what
+leaf keeps the existing path.  MoE expert banks (E, d_in, d_out) dispatch
+the same way through ``models.common.expert_dense`` ->
+:func:`sparse_moe_dense`, which consumes the dispatch buffer (G, E, C, d)
+directly against the expert-grid kernel ``nm_matmul_expert``.  The leaf's ``kernel_layout`` tag decides what
 the kernel streams: 2-bit-packed index planes (K % 8 == 0) go to the kernel
 *as stored* - the unpack happens inside the kernel after the HBM->VMEM copy,
 so there is no host-side ``unpacked_idx()`` round-trip on the serving path.
@@ -18,8 +21,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.nm_spmm import LAYOUT_INT8, LAYOUT_PACKED2, nm_matmul
+from repro.kernels.nm_spmm import (LAYOUT_INT8, LAYOUT_PACKED2, nm_matmul,
+                                   nm_matmul_expert)
 from repro.sparse import pack as pack_mod
 from repro.sparse.formats import SparseTensor
 
@@ -39,21 +44,25 @@ def _largest_block(dim: int, cap: int, mult: int = 1) -> int:
     return dim  # dim < mult: single block
 
 
-def _run_nm(x2: jax.Array, vals: jax.Array, idx: jax.Array, layout: str
-            ) -> jax.Array:
-    m, k = x2.shape
+def _run_nm(x: jax.Array, vals: jax.Array, idx: jax.Array, layout: str,
+            kernel=nm_matmul) -> jax.Array:
+    """Pick block sizes and dispatch: x (M, K) through ``nm_matmul`` or,
+    with ``kernel=nm_matmul_expert``, a per-expert batch (E, M, K) through
+    the expert-grid kernel (block selection only sees the trailing dims)."""
+    m, k = x.shape[-2:]
     n = vals.shape[-1]
     if jax.default_backend() == "tpu":
         bn = (_largest_block(n, 256, 128) if n % 128 == 0
               else _largest_block(n, 256))
         # packed tiles must cover whole index bytes (8 dense rows/byte row)
         bk_mult = 8 if layout == LAYOUT_PACKED2 else 4
-        return nm_matmul(x2, vals, idx, bm=_largest_block(m, 128),
-                         bk=_largest_block(k, 512, bk_mult), bn=bn,
-                         layout=layout)
-    # interpret mode: one tile = one fp32 dot, bit-matching the dense path
-    return nm_matmul(x2, vals, idx, bm=m, bk=k, bn=n, layout=layout,
-                     interpret=True)
+        return kernel(x, vals, idx, bm=_largest_block(m, 128),
+                      bk=_largest_block(k, 512, bk_mult), bn=bn,
+                      layout=layout)
+    # interpret mode: one tile (per expert) = one fp32 dot, bit-matching the
+    # dense path's contraction
+    return kernel(x, vals, idx, bm=m, bk=k, bn=n, layout=layout,
+                  interpret=True)
 
 
 def _kernel_operand(st: SparseTensor) -> tuple[jax.Array, str]:
@@ -77,6 +86,29 @@ def sparse_dense(st: SparseTensor, x: jax.Array) -> jax.Array:
     idx, layout = _kernel_operand(st)
     y = _run_nm(x2, st.vals.astype(x.dtype), idx, layout)
     return y.reshape(*lead, st.shape[-1])
+
+
+def sparse_moe_dense(st: SparseTensor, buf: jax.Array) -> jax.Array:
+    """MoE dispatch buffer (G, E, C, d) @ compressed expert bank (E, d, N)
+    -> (G, E, C, N) in buf.dtype.
+
+    Consumes the dispatch buffer directly: tokens regroup per expert to
+    (E, G*C, d) and run through ``nm_matmul_expert`` - one kernel invocation
+    covers every expert's GEMM, replacing ``moe_apply``'s masked-dense
+    einsum.  The index plane ships exactly as :func:`_kernel_operand`
+    decides for 2-D kernels (packed 2-bit when K % 8 == 0, int8 fallback
+    otherwise).
+    """
+    assert st.ndim == 3, (
+        "expert banks are (E, K, N); stacked (layers, E, K, N) leaves are "
+        "sliced by lax.scan before reaching the kernel")
+    G, E, C, d = buf.shape
+    assert st.shape[0] == E and st.shape[1] == d, (st.shape, buf.shape)
+    x3 = buf.swapaxes(0, 1).reshape(E, G * C, d)
+    idx, layout = _kernel_operand(st)
+    y = _run_nm(x3, st.vals.astype(buf.dtype), idx, layout,
+                kernel=nm_matmul_expert)
+    return y.reshape(E, G, C, st.shape[-1]).swapaxes(0, 1)
 
 
 def sparse_dense2(st_a: SparseTensor, st_b: SparseTensor, x: jax.Array
@@ -108,6 +140,50 @@ def _stacked(axes_str: str | None) -> bool:
     return bool(axes_str) and axes_str.startswith("layers|")
 
 
+def _aligned_leaves(ref_flat, ref_treedef, tree: PyTree, name: str) -> list:
+    """Flatten ``tree`` and validate it is structure-identical to params.
+
+    A silently mis-paired zip here would compress kernels against the wrong
+    masks (or worse, truncate the iteration); mismatches raise with the
+    first offending key path instead.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    if treedef != ref_treedef:
+        ref_paths = [jax.tree_util.keystr(kp) for kp, _ in ref_flat]
+        got_paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+        for rp, gp in zip(ref_paths, got_paths):
+            if rp != gp:
+                raise ValueError(
+                    f"{name} tree does not match params: first offending "
+                    f"key path {gp!r} ({name}) vs {rp!r} (params)")
+        if len(ref_paths) != len(got_paths):
+            longer, which = ((ref_paths, "params") if len(ref_paths)
+                             > len(got_paths) else (got_paths, name))
+            raise ValueError(
+                f"{name} tree does not match params: {len(got_paths)} "
+                f"leaves vs {len(ref_paths)} params leaves; first unmatched "
+                f"key path "
+                f"{longer[min(len(ref_paths), len(got_paths))]!r} ({which})")
+        # every key path matches: the trees differ only in container types
+        raise ValueError(
+            f"{name} tree does not match params: same {len(ref_paths)} leaf "
+            f"paths but different container structure "
+            f"({treedef} vs params {ref_treedef})")
+    return [leaf for _, leaf in flat]
+
+
+def _is_expert_bank(path: str, eff_ndim: int) -> bool:
+    """3-D-per-layer-step MoE expert bank (E, d_in, d_out)?
+
+    The leading dim must be an expert axis the consumer
+    (``moe_apply`` -> :func:`sparse_moe_dense`) dispatches over - keyed on
+    the ``['moe']`` subtree so unrelated 3-D kernels (e.g. per-head
+    recurrent weights) never get a layout their call sites cannot execute.
+    """
+    return eff_ndim == 3 and "['moe']" in path
+
+
 def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
                     idx_bits: int = 2, dtype=None,
                     predicate: Callable[[str], bool] | None = None) -> PyTree:
@@ -115,27 +191,30 @@ def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
 
     masks: keep-mask pytree from ``mirror.export_masks`` (mode="nm").  A
     kernel is compressed when its mask is 2:4-valid along the reduction dim
-    and it is 2-D per layer step (``axes`` - the ``models.model.param_axes``
-    tree - identifies scan-stacked leaves; >3-D leaves such as MoE expert
-    banks stay masked-dense until the kernel grows an expert axis).
-    Non-compressible masked leaves get ``W * mask``; None-mask leaves pass
-    through untouched.
+    and it is, per layer step, either 2-D or a 3-D MoE expert bank
+    (E, d_in, d_out) (``axes`` - the ``models.model.param_axes`` tree -
+    identifies scan-stacked leaves, whose leading "layers" axis is sliced by
+    ``lax.scan`` before execution).  Non-compressible masked leaves get
+    ``W * mask``; None-mask leaves pass through untouched.
+
+    masks/axes must be structure-identical to params: a mismatched tree
+    raises with the first offending key path instead of silently truncating
+    the zip and pairing kernels with the wrong masks.
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    flat_m = jax.tree_util.tree_flatten(
-        masks, is_leaf=lambda x: x is None)[0]
-    flat_a = (jax.tree_util.tree_flatten(
-        axes, is_leaf=lambda x: x is None)[0] if axes is not None
-        else [None] * len(flat))
+    flat_m = _aligned_leaves(flat, treedef, masks, "masks")
+    flat_a = (_aligned_leaves(flat, treedef, axes, "axes")
+              if axes is not None else [None] * len(flat))
     out = []
-    for (kp, w), mk, ax in zip(flat, flat_m, flat_a):
+    for (kp, w), mk, ax in zip(flat, flat_m, flat_a, strict=True):
         if mk is None:
             out.append(w)
             continue
         path = jax.tree_util.keystr(kp)
         eff_ndim = w.ndim - (1 if _stacked(ax) else 0)
         k_dim = w.shape[-2]
-        compressible = (eff_ndim == 2 and k_dim % 4 == 0
+        compressible = ((eff_ndim == 2 or _is_expert_bank(path, eff_ndim))
+                        and k_dim % 4 == 0
                         and (predicate is None or predicate(path))
                         and _is_nm(mk))
         if compressible:
@@ -151,7 +230,6 @@ def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
 
 def _is_nm(mask: jax.Array, m: int = 4, n: int = 2) -> bool:
     """Host-side check: exactly n kept per contiguous group of m."""
-    import numpy as np
     if mask.shape[-2] % m:
         return False
     g = np.asarray(mask).reshape(*mask.shape[:-2], mask.shape[-2] // m, m,
@@ -159,36 +237,55 @@ def _is_nm(mask: jax.Array, m: int = 4, n: int = 2) -> bool:
     return bool((g.sum(-2) == n).all())
 
 
-def compressed_report(params: PyTree) -> dict:
+def compressed_report(params: PyTree, masks: PyTree = None) -> dict:
     """Per-leaf and total weight bytes: compressed vs dense-bf16 equivalent.
 
     ``layout`` is the storage layout tag; ``kernel_layout`` is what the
     matmul actually streams (a byte-padded packed plane executes through the
     int8 fallback), so the bytes accounting stays honest: ``nbytes`` counts
     the stored (padded) plane, never a phantom unpadded one.
+
+    With ``masks`` (the keep-mask tree the params were sparsified against),
+    pruned leaves that did NOT compress - masked-dense fallbacks serving the
+    full dense byte footprint - are reported too, with
+    ``bytes_compressed == bytes_dense_bf16``, ``kernel_layout ==
+    "masked-dense"`` and ``fallback: True``, and they count into the
+    headline ratio; without masks only SparseTensor leaves are visible and
+    the ratio covers compressed leaves alone.
     """
-    flat, _ = jax.tree_util.tree_flatten_with_path(
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=lambda x: isinstance(x, SparseTensor))
+    flat_m = (_aligned_leaves(flat, treedef, masks, "masks")
+              if masks is not None else [None] * len(flat))
     layers = []
-    comp = dense_eq = 0
-    for kp, leaf in flat:
-        if not isinstance(leaf, SparseTensor):
-            continue
-        d = 1
-        for s in leaf.shape:
-            d *= s
-        d *= 2  # bf16 serving layout
-        layers.append({"path": jax.tree_util.keystr(kp),
-                       "shape": list(leaf.shape), "idx_bits": leaf.idx_bits,
-                       "layout": leaf.layout,
-                       "kernel_layout": leaf.kernel_layout,
-                       "bytes_compressed": leaf.nbytes,
-                       "bytes_dense_bf16": d,
-                       "ratio": leaf.nbytes / d})
+    for (kp, leaf), mk in zip(flat, flat_m, strict=True):
+        if isinstance(leaf, SparseTensor):
+            d = 1
+            for s in leaf.shape:
+                d *= s
+            d *= 2  # bf16 serving layout
+            layers.append({"path": jax.tree_util.keystr(kp),
+                           "shape": list(leaf.shape),
+                           "idx_bits": leaf.idx_bits,
+                           "layout": leaf.layout,
+                           "kernel_layout": leaf.kernel_layout,
+                           "bytes_compressed": leaf.nbytes,
+                           "bytes_dense_bf16": d,
+                           "ratio": leaf.nbytes / d,
+                           "fallback": False})
+        elif mk is not None:
+            # pruned but served masked-dense: full dense bytes move
+            d = 2 * int(np.prod(leaf.shape))
+            layers.append({"path": jax.tree_util.keystr(kp),
+                           "shape": list(leaf.shape), "idx_bits": None,
+                           "layout": None, "kernel_layout": "masked-dense",
+                           "bytes_compressed": d, "bytes_dense_bf16": d,
+                           "ratio": 1.0, "fallback": True})
     comp = sum(r["bytes_compressed"] for r in layers)
     dense_eq = sum(r["bytes_dense_bf16"] for r in layers)
     kernel_native = sum(r["kernel_layout"] == LAYOUT_PACKED2 for r in layers)
     return {"layers": layers, "bytes_compressed": comp,
             "bytes_dense_bf16": dense_eq,
             "kernel_native_packed": kernel_native,
+            "fallback_leaves": sum(r["fallback"] for r in layers),
             "ratio": comp / dense_eq if dense_eq else None}

@@ -161,9 +161,12 @@ class MaskBank:
     def sparse_params(self, params0: PyTree, *, sparsity: float | None = None,
                       nm: tuple[int, int] | None = None,
                       compressed: bool = True, idx_bits: int = 2,
-                      dtype=None) -> PyTree:
-        """W0 -> pruned params: compressed (SparseTensor kernels routed
-        through nm_matmul) or masked-dense (W0 * mask)."""
+                      dtype=None, with_masks: bool = False) -> PyTree:
+        """W0 -> pruned params: compressed (SparseTensor kernels - expert
+        banks included - routed through the nm_spmm kernels) or masked-dense
+        (W0 * mask).  with_masks=True also returns the keep-mask tree, so
+        callers can feed ``compressed_report(params, masks)`` and surface
+        masked-dense fallback leaves without re-thresholding."""
         from repro.core import masks as masks_mod
         from repro.models import model as M
         from repro.sparse import apply as apply_mod
@@ -171,10 +174,12 @@ class MaskBank:
             nm = (self.pcfg.nm_n, self.pcfg.nm_m)
         masks = self.masks_at(sparsity=sparsity, nm=nm)
         if not compressed or nm is None:
-            return masks_mod.apply_masks(params0, masks)
+            out = masks_mod.apply_masks(params0, masks)
+            return (out, masks) if with_masks else out
         if dtype is None:
             from repro.models.common import COMPUTE_DTYPE
             dtype = COMPUTE_DTYPE
-        return apply_mod.sparsify_params(
+        out = apply_mod.sparsify_params(
             params0, masks, axes=M.param_axes(self.cfg), idx_bits=idx_bits,
             dtype=dtype)
+        return (out, masks) if with_masks else out

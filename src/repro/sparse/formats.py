@@ -2,7 +2,10 @@
 
 ``SparseTensor``: the 2:4 layout ``kernels/nm_spmm.py`` executes - per group
 of 4 along the reduction dim, the two surviving values (``vals``,
-(..., K/2, N), compute dtype) and their in-group positions.  Positions are
+(..., K/2, N), compute dtype) and their in-group positions.  Leading dims
+pass through untouched: a scan-stacked kernel keeps its "layers" axis and a
+MoE expert bank (E, K, N) keeps its expert axis (executed by the
+expert-grid ``nm_matmul_expert``), stacked banks carry both.  Positions are
 stored either as int8 (``idx_bits=8``: (..., K/2, N)) or packed 4-per-byte
 (``idx_bits=2``: (..., ceil(K/8), N) uint8, position rows zero-padded to
 the byte boundary when K % 8 != 0), moving 9/16 of the dense-bf16 HBM

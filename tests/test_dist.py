@@ -109,6 +109,32 @@ def test_params_sharding_stacked_sparse_and_bitmask(mesh22):
     assert out["mask"].bits.spec == P()
 
 
+def test_params_sharding_expert_bank_leaves(mesh22):
+    """Expert-banked compressed leaves (layers, E, K, N): the leading expert
+    axis maps to the "experts" logical axis (-> "model"), and the (K, N)
+    component rules apply per expert - vals K/2 and idx K/8 keep their
+    sharding when they still divide, with the usual fallback."""
+    from repro.kernels import ref as kref
+    from repro.sparse import pack
+    rules = make_rules(mesh22)
+    w = jax.random.normal(jax.random.key(3), (2, 2, 32, 64), jnp.float32)
+    mask = jnp.stack([jnp.stack([kref.nm_mask_ref(w[l, e])
+                                 for e in range(2)]) for l in range(2)])
+    st = pack.pack_nm(w, mask, idx_bits=2)
+    # expert-parallel bank (deepseek-style): experts -> model, so the
+    # per-expert N dim ("mlp" -> model too) falls back to replicated
+    out = shd.params_sharding({"kernel": "layers|experts|embed|mlp"},
+                              {"kernel": st}, rules)
+    assert out["kernel"].vals.spec == P(None, "model", "data", None)
+    assert out["kernel"].idx.spec == P(None, "model", "data", None)
+    # tensor-parallel bank (mixtral-style, expert axis unsharded): the
+    # trailing dims keep the plain (K, N) component rules per expert
+    out2 = shd.params_sharding({"kernel": "layers||embed|mlp"},
+                               {"kernel": st}, rules)
+    assert out2["kernel"].vals.spec == P(None, None, "data", "model")
+    assert out2["kernel"].idx.spec == P(None, None, "data", "model")
+
+
 def test_sparse_leaf_device_put_multidevice():
     """End-to-end placement on a real 2x2 mesh (forced host devices in a
     subprocess: XLA device count is fixed at jax import): the compressed

@@ -68,6 +68,49 @@ def test_moe_shared_expert_added():
     assert not np.allclose(np.asarray(y0), np.asarray(y1))
 
 
+def test_moe_tape_stats_renormalized_by_routed_counts():
+    """Per-expert activation stats must come from the actually-routed rows,
+    rescaled to the layer's token count - NOT from the capacity-padded
+    dispatch buffer sample size.  Hand-computed oracle: with top_k=1 and
+    dropless capacity, expert e's stat is
+    sqrt(sum_{tokens routed to e} x_j^2 * T / n_e)."""
+    from repro.core import tape as tape_mod
+
+    E, d, T = 4, 16, 8
+    p = make(E=E, d=d)
+    x = 0.5 * jax.random.normal(jax.random.key(2), (1, T, d), jnp.float32)
+    t = tape_mod.StatsTape()
+    t.register_layer(p, "", -1)
+    with tape_mod.recording(t):
+        moe.moe_apply(p, x, top_k=1, capacity_factor=float(E))
+    stats = tape_mod.resolve_stats(t, p)
+
+    # oracle routing: top-1 of the same fp32 router logits
+    xt = np.asarray(x, np.float32).reshape(T, d)
+    logits = xt @ np.asarray(p["router"]["kernel"], np.float32)
+    routed_to = logits.argmax(-1)
+    want = np.zeros((E, d), np.float64)
+    for e in range(E):
+        rows = xt[routed_to == e]
+        if len(rows):
+            want[e] = np.sqrt((rows.astype(np.float64) ** 2).sum(0)
+                              * T / len(rows))
+    assert (routed_to == routed_to[0]).mean() < 1.0  # >1 expert exercised
+    np.testing.assert_allclose(np.asarray(stats["up"]["kernel"]), want,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats["gate"]["kernel"]), want,
+                               rtol=1e-5, atol=1e-6)
+    # an expert that saw n_e < T tokens must NOT read diluted: its stat is
+    # on the same T-token scale as a dense-FFN layer seeing every token
+    counts = np.bincount(routed_to, minlength=E)
+    e_small = counts.argmin()
+    if counts[e_small]:
+        undiluted = np.sqrt(
+            (xt[routed_to == e_small].astype(np.float64) ** 2).sum(0))
+        assert (np.asarray(stats["up"]["kernel"])[e_small].sum()
+                >= undiluted.sum())
+
+
 def test_positions_in_expert_capacity_semantics():
     flat_e = jnp.asarray([[0, 0, 0, 1, 0, 1]])
     e_idx, p_idx, keep, _ = moe._positions_in_expert(flat_e, E=2, C=2)

@@ -52,6 +52,42 @@ def test_single_token_prompt_resets_reused_slot():
     assert reused == fresh
 
 
+def test_eos_terminates_slot_and_reuses_it_midbatch():
+    """A slot must free on emitting eos (not just max_tokens): the eos is
+    the request's last output token, generation stops early, and a queued
+    request admitted into the freed slot decodes exactly as it would on a
+    fresh engine."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    p1, p2 = np.array([5, 6, 7, 8]), np.array([9, 10, 11])
+    eng0 = ServeEngine(cfg, params, slots=1, capacity=32)
+    assert eng0.eos_id is None  # cfg default: max_tokens only
+    r0 = eng0.submit(p1, 8)
+    base = eng0.run()[r0]
+    assert len(base) == 8                     # no eos -> runs to max_tokens
+    eos = base[0]                             # a token this stream emits
+
+    eng = ServeEngine(cfg, params, slots=1, capacity=32, eos_id=eos)
+    r1 = eng.submit(p1, 8)
+    r2 = eng.submit(p2, 4)          # queued; admitted after r1 hits eos
+    out = eng.run()
+    # terminated ON the first eos, eos included, well short of max_tokens
+    assert out[r1] == base[:base.index(eos) + 1] and len(out[r1]) < 8
+    # the non-eos stream is unaffected and the reused slot leaked nothing
+    assert eos not in out[r2] and len(out[r2]) == 4
+    fresh = ServeEngine(cfg, params, slots=1, capacity=32, eos_id=eos)
+    rf = fresh.submit(p2, 4)
+    assert fresh.run()[rf] == out[r2]
+
+    # eos_id plumbs from the ModelConfig when not passed explicitly
+    import dataclasses
+    cfg_eos = dataclasses.replace(cfg, eos_id=eos)
+    eng_cfg = ServeEngine(cfg_eos, params, slots=1, capacity=32)
+    assert eng_cfg.eos_id == eos
+    rc = eng_cfg.submit(p1, 8)
+    assert eng_cfg.run()[rc] == out[r1]
+
+
 def test_engine_batching_invariance():
     cfg = get_smoke_config("llama3.2-1b")
     params = M.init_params(cfg, jax.random.key(0))

@@ -108,6 +108,96 @@ def test_kernel_layout_tags():
     assert (st8.layout, st8.kernel_layout) == ("int8", "int8")
 
 
+def _expert_nm_mask(w):
+    """2:4 keep-mask for an (..., K, N) expert bank, per trailing 2-D slice."""
+    flat = w.reshape((-1,) + w.shape[-2:])
+    return jnp.stack([kref.nm_mask_ref(flat[i])
+                      for i in range(flat.shape[0])]).reshape(w.shape)
+
+
+@pytest.mark.parametrize("idx_bits,d", [(2, 16), (8, 16), (2, 12)])
+def test_sparse_moe_dense_matches_masked_einsum(idx_bits, d):
+    """Expert-grid kernel over the dispatch buffer == masked-dense einsum,
+    for the kernel-native packed, int8, and byte-padded (K % 8 != 0,
+    dispatch falls back to the int8 plane) layouts."""
+    E, f, G, C = 4, 24, 2, 5
+    w = jax.random.normal(jax.random.key(0), (E, d, f), jnp.float32)
+    mask = _expert_nm_mask(w)
+    st = pack.pack_nm(w, mask, idx_bits=idx_bits)
+    assert st.shape == (E, d, f)
+    buf = 0.3 * jax.random.normal(jax.random.key(1), (G, E, C, d),
+                                  jnp.float32)
+    y = apply_mod.sparse_moe_dense(st, buf)
+    want = jnp.einsum("gecd,edf->gecf", buf, w * mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sparsify_params_compresses_expert_banks():
+    """Scan-stacked MoE expert banks (layers, E, K, N) no longer fall back
+    to masked-dense: they pack with the expert axis carried through and the
+    masks-aware report shows zero fallbacks at the 9/16 bound."""
+    cfg = get_smoke_config("mixtral-8x22b")
+    params = M.init_params(cfg, jax.random.key(0))
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    masks = masks_mod.nm_masks(scores)
+    sp = apply_mod.sparsify_params(params, masks, axes=M.param_axes(cfg),
+                                   idx_bits=2, dtype=jnp.bfloat16)
+    rep = apply_mod.compressed_report(sp, masks)
+    expert = [l for l in rep["layers"] if "['moe']" in l["path"]]
+    assert len(expert) == 3  # up / gate / down banks
+    for l in expert:
+        assert len(l["shape"]) == 4 and not l["fallback"]  # (L, E, K, N)
+        assert l["kernel_layout"] == "packed2"
+    assert rep["fallback_leaves"] == 0
+    assert rep["ratio"] <= 9 / 16 + 1e-9
+
+
+def test_sparsify_params_rejects_mismatched_masks():
+    w = jax.random.normal(jax.random.key(0), (8, 8), jnp.float32)
+    params = {"a": {"kernel": w}, "b": {"kernel": w}}
+    mask = kref.nm_mask_ref(w)
+    with pytest.raises(ValueError, match="masks"):  # missing leaf
+        apply_mod.sparsify_params(params, {"a": {"kernel": mask}})
+    with pytest.raises(ValueError, match=r"\['c'\]"):  # mis-paired leaf
+        apply_mod.sparsify_params(
+            params, {"a": {"kernel": mask}, "c": {"kernel": mask}})
+    with pytest.raises(ValueError, match="axes"):
+        apply_mod.sparsify_params(
+            params, {"a": {"kernel": mask}, "b": {"kernel": mask}},
+            axes={"a": {"kernel": "embed|mlp"}})
+
+
+def test_compressed_report_fallback_leaves():
+    """Pruned leaves that stayed masked-dense must show up in the report
+    (full dense bytes, fallback flag) instead of silently inflating the
+    headline compression ratio."""
+    w = jax.random.normal(jax.random.key(0), (16, 8), jnp.float32)
+    wf = jax.random.normal(jax.random.key(1), (6, 8), jnp.float32)  # K%4!=0
+    masks = {"a": {"kernel": kref.nm_mask_ref(w)},
+             "b": {"kernel": jnp.ones_like(wf, jnp.bool_)}}
+    sp = apply_mod.sparsify_params({"a": {"kernel": w}, "b": {"kernel": wf}},
+                                   masks, idx_bits=2)
+    assert isinstance(sp["a"]["kernel"], formats.SparseTensor)
+    assert not isinstance(sp["b"]["kernel"], formats.SparseTensor)
+    rep = apply_mod.compressed_report(sp, masks)
+    by_path = {l["path"]: l for l in rep["layers"]}
+    fb = by_path["['b']['kernel']"]
+    assert fb["fallback"] and fb["kernel_layout"] == "masked-dense"
+    assert fb["bytes_compressed"] == fb["bytes_dense_bf16"] == 6 * 8 * 2
+    assert rep["fallback_leaves"] == 1
+    # headline ratio counts the dense bytes the fallback still moves
+    comp = by_path["['a']['kernel']"]
+    want = (comp["bytes_compressed"] + fb["bytes_dense_bf16"]) / \
+        (comp["bytes_dense_bf16"] + fb["bytes_dense_bf16"])
+    assert abs(rep["ratio"] - want) < 1e-12
+    # without masks the fallback is invisible (back-compat shape)
+    rep0 = apply_mod.compressed_report(sp)
+    assert rep0["fallback_leaves"] == 0 and len(rep0["layers"]) == 1
+
+
 def test_bitmask_roundtrip():
     key = jax.random.key(5)
     for shape in [(33, 7), (64, 128), (5,)]:
@@ -297,6 +387,75 @@ def test_decode_step_vector_positions_match_scalar():
                               jnp.full((B,), P, jnp.int32))
     np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
     _tree_eq(c_s, c_v)
+
+
+# -- MoE expert banks through the serving path ------------------------------
+
+@pytest.fixture(scope="module")
+def moe_sparse_tree():
+    cfg = get_smoke_config("mixtral-8x22b")
+    params = M.init_params(cfg, jax.random.key(0))
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    masks = masks_mod.nm_masks(scores)
+    sp = apply_mod.sparsify_params(params, masks, axes=M.param_axes(cfg),
+                                   idx_bits=2, dtype=jnp.bfloat16)
+    return cfg, params, masks, sp
+
+
+def test_moe_fused_decode_matches_vmap_and_masked_dense(moe_sparse_tree):
+    """Compressed expert banks through the continuous-batching engine:
+    fused single-invocation decode == legacy vmapped scan == masked-dense
+    oracle, token for token, with unequal prompt lengths so the 3rd/4th
+    requests admit mid-batch into freed slots."""
+    cfg, params, masks, sp = moe_sparse_tree
+    masked = masks_mod.apply_masks(params, masks)
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11]),
+               np.array([1, 2]), np.array([12, 13, 14, 15, 16])]
+    lens = [5, 3, 4, 4]
+    outs = {}
+    for name, p, mode in (("fused", sp, "fused"), ("vmap", sp, "vmap"),
+                          ("oracle", masked, "fused")):
+        eng = ServeEngine(cfg, p, slots=2, capacity=32, decode_mode=mode)
+        rids = [eng.submit(pr_, n) for pr_, n in zip(prompts, lens)]
+        res = eng.run()
+        outs[name] = [res[r] for r in rids]
+    assert outs["fused"] == outs["vmap"]
+    assert outs["fused"] == outs["oracle"]
+    assert [len(o) for o in outs["fused"]] == lens
+
+
+def test_moe_bank_from_artifact_serves_compressed(tmp_path):
+    """The acceptance path: calibrate a smoke MoE config, persist the bank,
+    and ``ServeEngine.from_artifact(..., compressed=True)`` must execute the
+    expert banks through the compressed kernel (packed2, no masked-dense
+    fallback, ratio <= 9/16) with tokens identical to the masked-dense
+    engine."""
+    cfg = get_smoke_config("mixtral-8x22b")
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    stats = calibrate.collect_stats(cfg, params, calib)
+    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
+    d = tmp_path / "bank_moe"
+    MaskBank.save(d, arch="mixtral-8x22b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    eng = ServeEngine.from_artifact(d, params, slots=2, capacity=32)
+    rep = apply_mod.compressed_report(eng.params)
+    expert = [l for l in rep["layers"] if "['moe']" in l["path"]]
+    assert expert and all(l["kernel_layout"] == "packed2" for l in expert)
+    assert rep["ratio"] <= 9 / 16 + 1e-9
+    bank = MaskBank.load(d)
+    masked = bank.sparse_params(params, compressed=False)
+    eng_m = ServeEngine(cfg, masked, slots=2, capacity=32)
+    prompts = [np.array([3, 1, 4, 1, 5]), np.array([2, 7])]
+    outs = []
+    for e in (eng, eng_m):
+        rids = [e.submit(p, 4) for p in prompts]
+        res = e.run()
+        outs.append([res[r] for r in rids])
+    assert outs[0] == outs[1]
 
 
 # -- engine prefill semantics ----------------------------------------------
