@@ -1,0 +1,106 @@
+"""Sparsity-fleet bench: ONE bank artifact -> N budgets behind one router.
+
+Exercises the full §4.3 serving story end-to-end on the smoke config:
+calibrate once, persist the mask bank, then ``SparsityFleet.from_artifact``
+materializes dense (0.0), unstructured-0.5 (masked-dense), and 2:4
+(compressed kernels) members that serve concurrently.  Tracked per PR as
+``results/bench/BENCH_fleet.json`` and gated by ``benchmarks/run.py
+--smoke``:
+
+* per-budget tok/s + compressed weight-byte ratio (2:4 at the packed bound
+  9/16, every member <= dense 1.0),
+* the NxN token-agreement matrix across members (diagonal == 1.0),
+* the 0.0-budget member token-identical to a plain dense ``ServeEngine``,
+* the bank thresholded exactly once per non-dense budget (memoization).
+
+CPU numbers are functional (interpret-mode kernel); the byte ratio is the
+TPU bandwidth story.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.table8_inference import write_serve_json
+
+BUDGETS = ["0.0", "0.5", "2:4"]
+
+
+def fleet_bench(out_rows: list, *, arch: str = "llama3.2-1b",
+                steps: int = 6) -> dict:
+    from repro.configs.base import PruneConfig, get_smoke_config
+    from repro.core import calibrate
+    from repro.data.synthetic import batches_for
+    from repro.models import model as M
+    from repro.serve.engine import ServeEngine
+    from repro.serve.fleet import SparsityFleet
+    from repro.sparse.bank import MaskBank
+
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    stats = calibrate.collect_stats(cfg, params, calib)
+    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
+    with tempfile.TemporaryDirectory() as td:
+        bank_dir = td + "/bank"
+        MaskBank.save(bank_dir, arch=arch, smoke=True, state=state,
+                      stats=stats, pcfg=pcfg)
+        fleet = SparsityFleet.from_artifact(bank_dir, params, BUDGETS,
+                                            slots=6, capacity=32)
+
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11]),
+               np.array([1, 2]), np.array([12, 13, 14, 15, 16])]
+    # tagged traffic: every member serves every prompt -> NxN agreement
+    matrix, outs = fleet.agreement_matrix(prompts, steps)
+    # weighted A/B traffic: deterministic split + live agreement vs densest
+    ab = {"0.0": 1, "0.5": 1, "2:4": 2}
+    ab_rids = [fleet.submit(p, steps, ab=ab) for p in prompts * 2]
+    t0 = time.perf_counter()
+    ab_res = fleet.run()
+    ab_dt = time.perf_counter() - t0
+    assert set(ab_rids) <= set(ab_res), "A/B requests lost by the router"
+    report = fleet.report()
+
+    # oracle: the 0.0 member must be token-identical to a plain dense engine
+    eng = ServeEngine(cfg, params, slots=2, capacity=32)
+    rids = [eng.submit(p, steps) for p in prompts]
+    res = eng.run()
+    dense_parity = [res[r] for r in rids] == outs["0.0"]
+
+    result = {
+        "arch": arch, "backend": jax.default_backend(),
+        "decode_steps": steps, "budgets": list(fleet.engines),
+        "reference": report["reference"],
+        "per_budget": report["budgets"],
+        "token_agreement": matrix,
+        "ab_weights": ab, "ab_requests": len(ab_rids),
+        "ab_seconds": ab_dt,
+        "mask_thresholds_computed": len(fleet.bank._mask_cache),
+        "dense_member_matches_plain_engine": dense_parity,
+    }
+    print(f"\n=== fleet bench ({arch} smoke, {jax.default_backend()}) ===")
+    print(f"one bank -> {len(fleet.engines)} budgets "
+          f"({result['mask_thresholds_computed']} threshold passes), "
+          f"reference {report['reference']}")
+    for name, r in report["budgets"].items():
+        print(f"  {name:>6}: {r['requests']} reqs, "
+              f"{(r['tok_s'] or 0):8.1f} tok/s, "
+              f"byte ratio {r['weight_bytes_ratio']:.4f}, "
+              f"shared dense leaves {r['shared_dense_leaves']}")
+    print(f"dense member == plain dense engine: {dense_parity}")
+    out_rows.append({"table": "fleet", **result})
+    return result
+
+
+def run(out_rows: list) -> None:
+    fleet_bench(out_rows)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = fleet_bench(rows)
+    print("wrote", write_serve_json(res, name="BENCH_fleet.json"))

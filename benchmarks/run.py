@@ -9,7 +9,11 @@ weight-byte ratio at or under the 2-bit-packed bound of 9/16, token parity
 vs masked-dense, and fused-vs-vmapped engine token parity; the MoE bench
 must produce ``results/bench/BENCH_serve_moe.json`` with every expert bank
 kernel-native packed (zero masked-dense fallbacks), the same 9/16 bound,
-and the same token parities - and exits non-zero otherwise.
+and the same token parities; the fleet bench must produce
+``results/bench/BENCH_fleet.json`` with one mask bank serving >= 3 budgets
+(thresholded once per non-dense budget), every member's weight-byte ratio
+<= dense (the 2:4 member at the 9/16 bound), and the 0.0-budget member
+token-identical to a plain dense engine - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
@@ -51,9 +55,33 @@ def smoke() -> None:
         "MoE compressed decode diverged from masked-dense"
     assert moe["engine_tokens_match_fused_vs_vmap"], \
         "MoE fused engine decode diverged from the vmapped scan"
-    print(f"smoke ok: wrote {path} (ratio {ratio:.4f}) and {moe_path} "
+    from benchmarks import bench_fleet
+
+    fleet = bench_fleet.fleet_bench(rows)
+    fleet_path = table8_inference.write_serve_json(
+        fleet, name="BENCH_fleet.json")
+    assert fleet_path.exists(), fleet_path
+    assert len(fleet["budgets"]) >= 3, fleet["budgets"]
+    assert fleet["dense_member_matches_plain_engine"], (
+        "the 0.0-budget fleet member diverged from a plain dense engine")
+    non_dense = [b for b in fleet["budgets"] if ":" in b or float(b) > 0]
+    assert fleet["mask_thresholds_computed"] == len(non_dense), (
+        f"bank thresholded {fleet['mask_thresholds_computed']}x for "
+        f"{len(non_dense)} non-dense budgets: memoization broken")
+    for name, r in fleet["per_budget"].items():
+        bound = 9 / 16 if ":" in name else 1.0
+        assert r["weight_bytes_ratio"] <= bound + 1e-9, (
+            f"fleet budget {name} weight-byte ratio "
+            f"{r['weight_bytes_ratio']} exceeds {bound}")
+        row = fleet["token_agreement"][name]
+        assert set(row) == set(fleet["budgets"]), (
+            f"agreement matrix row {name} missing members: {sorted(row)}")
+        assert all(0.0 <= v <= 1.0 for v in row.values()), row
+
+    print(f"smoke ok: wrote {path} (ratio {ratio:.4f}), {moe_path} "
           f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
-          "kernel-native)")
+          f"kernel-native) and {fleet_path} "
+          f"({len(fleet['budgets'])} budgets from one bank)")
 
 
 def main() -> None:
@@ -63,7 +91,7 @@ def main() -> None:
     if ap.parse_args().smoke:
         smoke()
         return
-    from benchmarks import (fig2_high_sparsity, oneshot_export,
+    from benchmarks import (bench_fleet, fig2_high_sparsity, oneshot_export,
                             table1_unstructured, table2_semistructured,
                             table4_local_metric, table5_mirror_ablation,
                             table8_inference)
@@ -72,7 +100,8 @@ def main() -> None:
     timings: list[tuple[str, float]] = []
     for mod in [table1_unstructured, table2_semistructured,
                 table4_local_metric, table5_mirror_ablation,
-                fig2_high_sparsity, table8_inference, oneshot_export]:
+                fig2_high_sparsity, table8_inference, bench_fleet,
+                oneshot_export]:
         name = mod.__name__.split(".")[-1]
         t0 = time.time()
         mod.run(rows)
@@ -88,6 +117,10 @@ def main() -> None:
     if moe_rows:
         table8_inference.write_serve_json(moe_rows[0],
                                           name="BENCH_serve_moe.json")
+    fleet_rows = [r for r in rows if r.get("table") == "fleet"]
+    if fleet_rows:
+        table8_inference.write_serve_json(fleet_rows[0],
+                                          name="BENCH_fleet.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

@@ -1,11 +1,13 @@
-"""Mask-bank round trip: calibrate ONCE, serve sparse TWICE (paper §4.3 +
-Table 8 scenario).
+"""Mask-bank round trip: calibrate ONCE, serve at FOUR budgets (paper §4.3
++ Table 8 scenario).
 
 Run 1 calibrates UniPruning inline and persists the post-calibration state
-(Gamma/V/stats/PruneConfig) as a mask-bank artifact.  Runs 2 and 3 never
-touch the mirror-descent search again: they load the bank, re-threshold to
-masks in one shot, and serve - first with 2:4-compressed weights executing
-through the nm_spmm kernel, then masked-dense for an A/B token check.
+(Gamma/V/stats/PruneConfig) as a mask-bank artifact.  Runs 2-4 never touch
+the mirror-descent search again: they load the bank, re-threshold to masks
+in one shot, and serve - first with 2:4-compressed weights executing
+through the nm_spmm kernel, then masked-dense for an A/B token check, then
+a sparsity FLEET serving dense + unstructured + 2:4 concurrently behind
+one router with weighted A/B traffic.
 
   PYTHONPATH=src python examples/serve_sparse.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_sparse.py --arch gemma2-2b \
@@ -40,6 +42,9 @@ runs = [
     # 3: same masks, masked-dense weights - tokens must match run 2
     base + ["--sparse-artifact", artifact, "--weight-format", "masked"]
     + sparsity,
+    # 4: the same ONE bank serving three budgets concurrently, A/B split
+    base + ["--sparse-artifact", artifact, "--fleet", "0.0,0.5,2:4",
+            "--ab", "1,1,2"],
 ]
 for cmd in runs:
     print("+", " ".join(cmd), flush=True)

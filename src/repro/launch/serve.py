@@ -10,12 +10,19 @@ mesh.  Sparse serving has two modes:
   load the bank, re-threshold to masks in one shot, and serve with
   2:4-compressed weights executing through ``kernels.nm_spmm.nm_matmul``
   (``--weight-format masked`` serves the same masks as masked-dense W0*M -
-  token-for-token identical, for A/B checks).
+  token-for-token identical, for A/B checks);
+* ``--sparse-artifact DIR --fleet 0.0,0.5,2:4 [--ab W,W,...]`` - serve N
+  budgets from the SAME bank concurrently behind one router
+  (``serve.fleet.SparsityFleet``): tagged round-robin by default, weighted
+  A/B traffic splitting with ``--ab`` (per-budget tok/s + token-agreement
+  vs the densest member in the printed report).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --sparse --save-artifact results/bank/llama --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --sparse-artifact results/bank/llama --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --sparse-artifact results/bank/llama --fleet 0.0,0.5,2:4 --ab 1,1,2
 """
 from __future__ import annotations
 
@@ -82,6 +89,50 @@ def _load_sparse(args, params):
     return bank.cfg, sparse
 
 
+def _serve_fleet(args, params) -> None:
+    """N budgets from one bank behind one router; prints the A/B report."""
+    from repro.serve.fleet import SparsityFleet
+    budgets = [b for b in args.fleet.split(",") if b]
+    capacity = args.prompt_len + args.gen + 1
+    fleet = SparsityFleet.from_artifact(
+        args.sparse_artifact, params, budgets, slots=args.slots,
+        capacity=capacity, idx_bits=args.idx_bits)
+    cfg = fleet.cfg
+    batch = batches_for(cfg, n=1, batch=args.batch, seq=args.prompt_len,
+                        split="valid")[0]
+    prompts = [np.asarray(batch["tokens"][i]) for i in range(args.batch)]
+    names = list(fleet.engines)
+    if args.ab:
+        weights = [float(w) for w in args.ab.split(",")]
+        if len(weights) != len(names):
+            raise SystemExit(f"--ab needs {len(names)} weights (one per "
+                             f"--fleet budget), got {len(weights)}")
+        ab = dict(zip(names, weights))
+        rids = [fleet.submit(p, args.gen, ab=ab) for p in prompts]
+        print(f"A/B split over {names} with weights {weights}")
+    else:
+        rids = [fleet.submit(p, args.gen, budget=names[i % len(names)])
+                for i, p in enumerate(prompts)]
+        print(f"tagged round-robin over {names}")
+    t0 = time.time()
+    out = fleet.run()
+    dt = time.time() - t0
+    rep = fleet.report()
+    print(f"fleet served {len(out)} requests x {args.gen} tokens from "
+          f"{args.sparse_artifact} in {dt:.2f}s "
+          f"(reference: {rep['reference']})")
+    for name, r in rep["budgets"].items():
+        agree = r["token_agreement_vs_reference"]
+        print(f"  {name:>6}: slots {r['slots']}, {r['requests']} reqs, "
+              f"{(r['tok_s'] or 0):8.1f} tok/s, "
+              f"byte ratio {r['weight_bytes_ratio']:.4f} "
+              f"({r['compressed_kernels']} compressed, "
+              f"{r['fallback_leaves']} masked-dense), "
+              f"shared dense leaves {r['shared_dense_leaves']}"
+              + (f", agreement vs ref {agree:.3f}" if agree is not None
+                 else ""))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -105,6 +156,17 @@ def main(argv=None) -> None:
                     help="compressed index layout: 2 = packed 4-per-byte "
                          "(kernel-native, 9/16 of dense bf16 bytes), "
                          "8 = int8 fallback plane (3/4)")
+    ap.add_argument("--fleet", default=None,
+                    help="with --sparse-artifact: comma-separated budgets "
+                         "served concurrently from the one bank behind one "
+                         "router, e.g. 0.0,0.5,2:4")
+    ap.add_argument("--ab", default=None,
+                    help="with --fleet: comma-separated traffic weights "
+                         "aligned with the --fleet budgets (default: "
+                         "tagged round-robin)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="fleet decode-slot pool partitioned across "
+                         "budgets (default: 2 per budget)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
 
@@ -112,6 +174,12 @@ def main(argv=None) -> None:
     assert not cfg.is_encoder_decoder or args.gen > 0
     params = M.init_params(cfg, jax.random.key(0))
 
+    if args.fleet:
+        if not args.sparse_artifact:
+            raise SystemExit("--fleet serves from a saved mask bank: "
+                             "pass --sparse-artifact DIR")
+        _serve_fleet(args, params)
+        return
     if args.sparse_artifact:
         cfg, params = _load_sparse(args, params)
     elif args.sparse:

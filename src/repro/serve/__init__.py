@@ -1,0 +1,14 @@
+"""Serving layer.
+
+* ``engine`` - :class:`ServeEngine`, slot-based continuous batching over a
+  fixed-slot KV cache (dense or 2:4-compressed weights), with the jitted
+  step functions factored into :class:`EngineFns` so multiple engines can
+  share compilations.
+* ``fleet`` - :class:`SparsityFleet`, N sparsity budgets materialized from
+  ONE mask bank and served behind a single router with tagged and A/B
+  traffic splitting (per-budget tok/s + token-agreement vs the densest
+  member).
+"""
+from repro.serve.engine import EngineFns, ServeEngine  # noqa: F401
+from repro.serve.fleet import (  # noqa: F401
+    Budget, SparsityFleet, parse_budget, token_agreement)

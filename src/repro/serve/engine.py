@@ -25,6 +25,13 @@ production mesh via the same jitted step functions); passing ``rules``
 (a ``dist.axes.ShardingRules``) places params - compressed SparseTensor
 leaves included, via ``dist.sharding.params_sharding`` - and KV caches onto
 the mesh before serving.
+
+The jitted step functions (decode, per-bucket prefill, the slot-admission
+write) and the blank-slot template live in :class:`EngineFns`; engines that
+share one instance (``serve.fleet.SparsityFleet`` members) share jit entry
+points and therefore compilations.  Request validation happens at
+``submit()`` - an empty prompt, a prompt at/over cache capacity, or a
+``max_tokens <= 0`` request never claims a slot.
 """
 from __future__ import annotations
 
@@ -56,14 +63,85 @@ class Request:
                                   # each generated one)
 
 
+class EngineFns:
+    """Jitted step functions + slot templates for one (cfg, capacity,
+    decode_mode) triple.
+
+    ``ServeEngine`` builds one per instance by default; a multi-engine owner
+    (``serve.fleet.SparsityFleet``) builds ONE and hands it to every member,
+    so the decode / prefill / slot-write callables are shared jit entry
+    points: N budget engines compile each step function once per distinct
+    params *structure* (jit retraces per treedef) instead of once per
+    engine.
+    """
+
+    def __init__(self, cfg: ModelConfig, capacity: int,
+                 decode_mode: str = "fused"):
+        assert decode_mode in ("fused", "vmap"), decode_mode
+        self.cfg = cfg
+        self.capacity = capacity
+        self.decode_mode = decode_mode
+        self.prefill_fns: dict[int, Any] = {}   # bucket -> jitted prefill
+        self._blank_row = None  # lazily-built slot-reset template
+        # slot admission: one jitted dynamic-index row write (slot index is
+        # an operand, not a constant -> one compile covers every slot)
+        self.write_slot = jax.jit(lambda full, row, s: jax.tree.map(
+            lambda f, n: jax.lax.dynamic_update_index_in_dim(
+                f, n[:, 0], s, axis=1), full, row))
+
+        if decode_mode == "vmap":
+            def _row_step(p, tok, cache_row, t):
+                """One slot's decode at its own position t (vmapped)."""
+                caches = jax.tree.map(lambda a: a[:, None], cache_row)
+                logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
+                return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
+
+            self.decode = jax.jit(jax.vmap(
+                _row_step, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
+        else:
+            # fused: one decode_step over all slots, per-slot positions as
+            # an index vector (no vmapped scan, no per-slot kernel launches)
+            self.decode = jax.jit(
+                lambda p, toks, caches, t: M.decode_step(cfg, p, toks,
+                                                         caches, t))
+
+    def prefill(self, bucket: int) -> Any:
+        """Jitted chunked prefill for one padded prompt-length bucket."""
+        fn = self.prefill_fns.get(bucket)
+        if fn is None:
+            fn = jax.jit(lambda p, toks: M.prefill(
+                self.cfg, p, {"tokens": toks},
+                cache_capacity=self.capacity)[1])
+            self.prefill_fns[bucket] = fn
+        return fn
+
+    def blank_row(self) -> Any:
+        """1-slot cache template that resets a reused slot's state."""
+        if self._blank_row is None:
+            self._blank_row = M.init_caches(self.cfg, 1, self.capacity)
+        return self._blank_row
+
+
 class ServeEngine:
     """Slot-based continuous batching (greedy decode)."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  capacity: int = 512, decode_mode: str = "fused",
-                 rules: Any = None, eos_id: int | None = None):
+                 rules: Any = None, eos_id: int | None = None,
+                 fns: EngineFns | None = None):
         assert not cfg.is_encoder_decoder, "decoder-only engine"
-        assert decode_mode in ("fused", "vmap"), decode_mode
+        if fns is None:
+            fns = EngineFns(cfg, capacity, decode_mode)
+        elif (fns.cfg, fns.capacity, fns.decode_mode) != \
+                (cfg, capacity, decode_mode):
+            # a mismatched EngineFns would prefill at the wrong cache
+            # capacity (opaque shape error mid-run) or silently decode
+            # through the other mode - and asserts vanish under python -O
+            raise ValueError(
+                "shared EngineFns was built for "
+                f"(capacity={fns.capacity}, decode_mode={fns.decode_mode}) "
+                f"and cannot serve (capacity={capacity}, "
+                f"decode_mode={decode_mode}) or a different cfg")
         self.cfg = cfg
         self.slots = slots
         self.capacity = capacity
@@ -84,6 +162,7 @@ class ServeEngine:
         self.pos = np.zeros((slots,), np.int32)       # next position per slot
         self.active: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
+        self._done_unslotted: list[Request] = []  # finished without a slot
         self._next_rid = 0
         self._pad_prefill = set(cfg.layer_kinds) <= _PAD_SAFE_KINDS
         # padding past the prompt is only invisible while every junk ring
@@ -91,29 +170,9 @@ class ServeEngine:
         # their ring at min(capacity, window), so buckets must fit that ring
         self._min_ring = (min(capacity, cfg.sliding_window)
                           if cfg.sliding_window else capacity)
-        self._prefill_fns: dict[int, Any] = {}
-        self._blank_row = None  # lazily-built slot-reset template
-        # slot admission: one jitted dynamic-index row write (slot index is
-        # an operand, not a constant -> one compile covers every slot)
-        self._write_slot = jax.jit(lambda full, row, s: jax.tree.map(
-            lambda f, n: jax.lax.dynamic_update_index_in_dim(
-                f, n[:, 0], s, axis=1), full, row))
-
-        if decode_mode == "vmap":
-            def _row_step(p, tok, cache_row, t):
-                """One slot's decode at its own position t (vmapped)."""
-                caches = jax.tree.map(lambda a: a[:, None], cache_row)
-                logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
-                return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
-
-            self._decode = jax.jit(jax.vmap(
-                _row_step, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
-        else:
-            # fused: one decode_step over all slots, per-slot positions as
-            # an index vector (no vmapped scan, no per-slot kernel launches)
-            self._decode = jax.jit(
-                lambda p, toks, caches, t: M.decode_step(cfg, p, toks,
-                                                         caches, t))
+        self.fns = fns
+        self._write_slot = fns.write_slot
+        self._decode = fns.decode
 
     @classmethod
     def from_artifact(cls, bank_dir, params0: Any, *,
@@ -133,15 +192,49 @@ class ServeEngine:
     # -- client API ----------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_tokens: int = 16) -> int:
+        """Queue a request; every admission invariant is checked HERE.
+
+        Rejections raise before a slot is claimed, so an invalid request can
+        never wedge a slot mid-prefill or abort the ``run()`` loop for the
+        other requests in the batch (the old code asserted inside
+        ``_prefill_slot``, after the slot was taken - and asserts vanish
+        under ``python -O``).
+        """
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError(
+                "empty prompt: a request needs at least one token to feed "
+                "the first decode step (rejected at submit, no slot claimed)")
+        if len(prompt) - 1 >= self.capacity:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens needs {len(prompt) - 1} "
+                f"prefill cache rows but engine capacity is {self.capacity} "
+                "(rejected at submit, no slot claimed)")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_tokens))
+        req = Request(rid, prompt, max_tokens)
+        if max_tokens <= 0:
+            # short-circuit: a zero-token request is already complete; it
+            # must not claim a slot or spend a decode step (which would
+            # also wrongly emit one token before the length check)
+            req.done = True
+            self._done_unslotted.append(req)
+        else:
+            self.queue.append(req)
         return rid
+
+    @property
+    def pending(self) -> bool:
+        """Any submitted-but-undelivered work (queued, active, or finished
+        without a slot and awaiting the next ``run()``)."""
+        return bool(self.queue or self._done_unslotted
+                    or any(r is not None for r in self.active))
 
     def run(self) -> dict[int, list[int]]:
         """Drive until all submitted requests complete; returns rid->tokens."""
-        results: dict[int, list[int]] = {}
+        results: dict[int, list[int]] = {
+            r.rid: r.out for r in self._done_unslotted}
+        self._done_unslotted.clear()
         while self.queue or any(r is not None for r in self.active):
             self._admit()
             finished = self._step()
@@ -178,24 +271,16 @@ class ServeEngine:
         junk ring slot is overwritten by the real token before it could
         become visible.
         """
-        n = len(req.prompt) - 1
-        assert n < self.capacity, (n, self.capacity)
+        n = len(req.prompt) - 1  # submit() guarantees 0 <= n < capacity
         if n == 0:
             # no prefill forward runs, so nothing replaces the slot's cache
             # row; reset it explicitly or a reused slot leaks the previous
             # request's recurrent state (attention rings are position-masked,
             # ssm/xlstm state is not)
-            if self._blank_row is None:
-                self._blank_row = M.init_caches(self.cfg, 1, self.capacity)
-            row = self._blank_row
+            row = self.fns.blank_row()
         else:
             bucket = self._prefill_bucket(n)
-            fn = self._prefill_fns.get(bucket)
-            if fn is None:
-                fn = jax.jit(lambda p, toks: M.prefill(
-                    self.cfg, p, {"tokens": toks},
-                    cache_capacity=self.capacity)[1])
-                self._prefill_fns[bucket] = fn
+            fn = self.fns.prefill(bucket)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = req.prompt[:-1]
             row = fn(self.params, jnp.asarray(toks))

@@ -1,0 +1,326 @@
+"""Multi-budget sparsity fleet: ONE mask bank, N budgets, one router.
+
+UniPruning's headline property (paper §4.3) is that a single calibration
+yields masks for *arbitrary* sparsity levels in one shot - global-update
+baselines (SparseLLM, surrogate-free ADMM) re-solve per target
+configuration.  The fleet is where that property reaches serving: one
+``MaskBank`` artifact materializes N budget variants (dense passthrough,
+unstructured masked-dense, N:M compressed) behind a single router, so
+quality/latency tradeoffs A/B live against real traffic instead of per
+re-deployed process.
+
+Construction cost is amortized three ways:
+
+* the bank's calibration state is loaded once and **thresholded once per
+  budget** (``MaskBank.masks_at`` memoizes per (sparsity, nm) key); two
+  members at the same budget share one params tree (the fleet memoizes
+  ``sparse_params`` per budget too);
+* dense leaves that pruning leaves untouched (embeddings, norms, biases)
+  pass through ``sparse_params`` by object identity, so N members share ONE
+  copy (``sparse.apply.shared_leaves`` counts the invariant);
+* all members share one :class:`~repro.serve.engine.EngineFns` - the jitted
+  decode/prefill/slot-write entry points - so step functions compile once
+  per distinct params *structure*, not once per engine.
+
+Routing: ``submit(prompt, budget=...)`` pins a request to one member;
+``submit(prompt, ab=...)`` splits traffic across members by weight
+(deterministic weighted fair scheduling - no RNG, reproducible splits) and
+mirrors each off-reference request onto the *densest* member so the router
+accumulates per-budget token-agreement alongside tokens/s.  ``report()``
+returns the live quality/latency table; ``agreement_matrix`` serves a
+prompt set through every member for the full NxN comparison.
+
+The slot pool is partitioned across members at construction: ``slots``
+total decode slots spread round-robin (every member gets at least one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Iterable, Mapping
+
+import jax
+import numpy as np
+
+from repro.serve.engine import EngineFns, ServeEngine
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """One fleet member's sparsity target.
+
+    kind: ``dense`` (serve params0 untouched), ``unstructured`` (global
+    budget, masked-dense serving) or ``nm`` ((n, m) semi-structured,
+    2:4-compressed kernels when the pattern is 2:4).
+    """
+    kind: str
+    sparsity: float = 0.0
+    nm: tuple[int, int] | None = None
+
+    @property
+    def name(self) -> str:
+        if self.kind == "nm":
+            return f"{self.nm[0]}:{self.nm[1]}"
+        return "0.0" if self.kind == "dense" else f"{self.sparsity:g}"
+
+    @property
+    def pruned_frac(self) -> float:
+        """Fraction of prunable weights removed (density ordering key)."""
+        if self.kind == "dense":
+            return 0.0
+        if self.kind == "nm":
+            return 1.0 - self.nm[0] / self.nm[1]
+        return self.sparsity
+
+
+def parse_budget(spec) -> Budget:
+    """``"2:4"`` / ``(2, 4)`` -> N:M; ``"0.5"`` / ``0.5`` -> unstructured;
+    ``"0.0"`` / ``0`` / ``"dense"`` -> dense passthrough."""
+    if isinstance(spec, Budget):
+        return spec
+    if isinstance(spec, tuple):
+        n, m = spec
+        return Budget("nm", nm=(int(n), int(m)))
+    if isinstance(spec, (int, float)) and not isinstance(spec, bool):
+        s = float(spec)
+    else:
+        text = str(spec).strip().lower()
+        if text == "dense":
+            return Budget("dense")
+        if ":" in text:
+            n, m = text.split(":")
+            return Budget("nm", nm=(int(n), int(m)))
+        s = float(text)
+    if not 0.0 <= s < 1.0:
+        raise ValueError(f"sparsity budget must be in [0, 1), got {s}")
+    return Budget("dense") if s == 0.0 else Budget("unstructured", sparsity=s)
+
+
+def token_agreement(a: list, b: list) -> float:
+    """Positionwise match fraction over the longer stream (a length
+    mismatch - e.g. one side hit eos earlier - counts as disagreement)."""
+    n = max(len(a), len(b))
+    if n == 0:
+        return 1.0
+    return sum(x == y for x, y in zip(a, b)) / n
+
+
+def _partition_slots(slots: int, n: int) -> list[int]:
+    """Spread ``slots`` across ``n`` members, earlier members first."""
+    base, rem = divmod(slots, n)
+    return [base + (i < rem) for i in range(n)]
+
+
+class SparsityFleet:
+    """N sparsity budgets from one mask bank behind a single router."""
+
+    def __init__(self, bank, params0: PyTree, budgets: Iterable, *,
+                 slots: int | None = None, capacity: int = 512,
+                 decode_mode: str = "fused", rules: Any = None,
+                 eos_id: int | None = None, idx_bits: int = 2):
+        from repro.sparse import apply as apply_mod
+        self.bank = bank
+        self.cfg = bank.cfg
+        budgets = [parse_budget(b) for b in budgets]
+        self._order = [b.name for b in budgets]
+        if len(set(self._order)) != len(self._order):
+            raise ValueError(f"duplicate budgets in fleet: {self._order}")
+        self.budgets = {b.name: b for b in budgets}
+        slots = 2 * len(budgets) if slots is None else slots
+        if slots < len(budgets):
+            raise ValueError(
+                f"{slots} slots cannot cover {len(budgets)} budgets "
+                "(every member needs at least one)")
+        # the shared helper: one set of jitted step functions for every
+        # member (see EngineFns - compile per params structure, not per
+        # engine)
+        self.fns = EngineFns(self.cfg, capacity, decode_mode)
+        self.engines: dict[str, ServeEngine] = {}
+        self.reports: dict[str, dict] = {}
+        for b, s in zip(budgets, _partition_slots(slots, len(budgets))):
+            params, report = self._materialize(b, params0, idx_bits,
+                                               apply_mod)
+            self.engines[b.name] = ServeEngine(
+                self.cfg, params, slots=s, capacity=capacity,
+                decode_mode=decode_mode, rules=rules, eos_id=eos_id,
+                fns=self.fns)
+            self.reports[b.name] = report
+        # densest member = the quality reference A/B agreement is scored
+        # against (ties break toward earlier budget order)
+        self.reference = min(
+            budgets, key=lambda b: (b.pruned_frac,
+                                    self._order.index(b.name))).name
+        self._routes: dict[int, tuple[str, int]] = {}   # frid -> (name, rid)
+        self._shadows: dict[int, int] = {}  # frid -> reference engine rid
+        self._next_rid = 0
+        self._ab_served: dict[str, int] = {n: 0 for n in self._order}
+        self._stats = {n: {"requests": 0, "tokens": 0, "seconds": 0.0,
+                           "agree_sum": 0.0, "agree_n": 0}
+                       for n in self._order}
+
+    @classmethod
+    def from_artifact(cls, bank_dir, params0: PyTree, budgets: Iterable,
+                      **kw) -> "SparsityFleet":
+        """One artifact -> N budget engines (no re-calibration)."""
+        from repro.sparse.bank import MaskBank
+        return cls(MaskBank.load(bank_dir), params0, budgets, **kw)
+
+    # -- per-budget weights --------------------------------------------------
+
+    def _materialize(self, b: Budget, params0: PyTree, idx_bits: int,
+                     apply_mod) -> tuple[PyTree, dict]:
+        """Budget -> (params tree, byte report).  Budget names are unique
+        per fleet, so this runs once per member; the expensive part - the
+        threshold pass over the calibration state - is memoized in the bank
+        itself (``MaskBank.masks_at``), shared across fleets over one bank.
+        """
+        n_leaves = len(jax.tree.leaves(params0))
+        if b.kind == "dense":
+            # passthrough: every leaf shared, trivially token-identical to a
+            # plain dense engine over the same params0
+            report = {"weight_bytes_ratio": 1.0, "compressed_kernels": 0,
+                      "fallback_leaves": 0, "shared_dense_leaves": n_leaves}
+            out = (params0, report)
+        else:
+            compressed = b.kind == "nm"
+            params, masks = self.bank.sparse_params(
+                params0,
+                sparsity=b.sparsity if b.kind == "unstructured" else None,
+                nm=b.nm, compressed=compressed, idx_bits=idx_bits,
+                with_masks=True)
+            rep = apply_mod.compressed_report(params, masks)
+            report = {"weight_bytes_ratio": rep["ratio"],
+                      "compressed_kernels": len(rep["layers"])
+                      - rep["fallback_leaves"],
+                      "fallback_leaves": rep["fallback_leaves"],
+                      "shared_dense_leaves":
+                          apply_mod.shared_leaves(params0, params)}
+            out = (params, report)
+        return out
+
+    # -- routing -------------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_tokens: int = 16, *,
+               budget=None, ab=None) -> int:
+        """Route one request; exactly one of ``budget=`` / ``ab=``.
+
+        budget: a member (any ``parse_budget`` spelling) - pinned routing.
+        ab: True (uniform split) or a {budget: weight} mapping - the fleet
+        picks the member deterministically (weighted fair: the member with
+        the smallest served/weight ratio) and, when the pick is not the
+        densest member, mirrors the request onto the reference engine so
+        ``report()`` accumulates token-agreement for the pick.
+        """
+        if (budget is None) == (ab is None):
+            raise ValueError("pass exactly one of budget= or ab=")
+        if budget is not None:
+            name = parse_budget(budget).name
+            if name not in self.engines:
+                raise KeyError(
+                    f"budget {name!r} not in fleet {self._order}")
+        else:
+            name = self._pick_ab(ab)
+        frid = self._next_rid
+        self._next_rid += 1
+        erid = self.engines[name].submit(prompt, max_tokens)
+        self._routes[frid] = (name, erid)
+        self._stats[name]["requests"] += 1
+        if ab is not None and name != self.reference:
+            # shadow for live agreement: same prompt through the densest
+            # member, consumed by the stats only (never returned to the
+            # caller under this frid)
+            self._shadows[frid] = self.engines[self.reference].submit(
+                prompt, max_tokens)
+        return frid
+
+    def _pick_ab(self, ab) -> str:
+        if ab is True:
+            weights = {n: 1.0 for n in self._order}
+        elif isinstance(ab, Mapping):
+            weights = {parse_budget(k).name: float(v) for k, v in ab.items()}
+        else:
+            raise TypeError(f"ab= takes True or a mapping, got {type(ab)}")
+        unknown = set(weights) - set(self.engines)
+        if unknown:
+            raise KeyError(f"ab budgets {sorted(unknown)} not in fleet "
+                           f"{self._order}")
+        if not weights or min(weights.values()) <= 0:
+            raise ValueError(f"ab weights must be positive: {weights}")
+        # deterministic weighted fair pick: lowest (served+1)/weight next
+        name = min(weights, key=lambda n: ((self._ab_served[n] + 1)
+                                           / weights[n],
+                                           self._order.index(n)))
+        self._ab_served[name] += 1
+        return name
+
+    def run(self) -> dict[int, list[int]]:
+        """Drive every member to completion; returns fleet rid -> tokens.
+
+        Per-member wall time and token counts accumulate into ``report()``;
+        A/B shadow outputs are folded into the router's agreement stats and
+        dropped (the caller sees only the member its request routed to).
+        """
+        per_engine: dict[str, dict[int, list[int]]] = {}
+        for name, eng in self.engines.items():
+            if not eng.pending:
+                continue
+            t0 = time.perf_counter()
+            res = eng.run()
+            dt = time.perf_counter() - t0
+            per_engine[name] = res
+            st = self._stats[name]
+            st["seconds"] += dt
+            st["tokens"] += sum(len(v) for v in res.values())
+        merged: dict[int, list[int]] = {}
+        for frid, (name, erid) in list(self._routes.items()):
+            res = per_engine.get(name, {})
+            if erid not in res:
+                continue
+            merged[frid] = res[erid]
+            del self._routes[frid]
+            shadow = self._shadows.pop(frid, None)
+            if shadow is not None:
+                ref_out = per_engine[self.reference][shadow]
+                st = self._stats[name]
+                st["agree_sum"] += token_agreement(merged[frid], ref_out)
+                st["agree_n"] += 1
+        return merged
+
+    # -- live quality/latency ------------------------------------------------
+
+    def report(self) -> dict:
+        """Per-budget serving table: slots, traffic, tok/s, compressed
+        ratio, and A/B token-agreement vs the densest member."""
+        budgets = {}
+        for name in self._order:
+            st = self._stats[name]
+            budgets[name] = {
+                "slots": self.engines[name].slots,
+                "requests": st["requests"],
+                "tokens": st["tokens"],
+                "tok_s": (st["tokens"] / st["seconds"]
+                          if st["seconds"] else None),
+                "token_agreement_vs_reference": (
+                    st["agree_sum"] / st["agree_n"] if st["agree_n"]
+                    else None),
+                **self.reports[name],
+            }
+        return {"reference": self.reference, "budgets": budgets}
+
+    def agreement_matrix(self, prompts: list, max_tokens: int = 8
+                         ) -> tuple[dict, dict]:
+        """Serve every prompt through every member (live traffic, counted
+        in ``report()``); returns (NxN mean token-agreement, per-member
+        outputs)."""
+        rids = {name: [self.submit(p, max_tokens, budget=name)
+                       for p in prompts] for name in self._order}
+        res = self.run()
+        outs = {name: [res[r] for r in rids[name]] for name in self._order}
+        matrix = {
+            a: {b: float(np.mean([token_agreement(x, y) for x, y
+                                  in zip(outs[a], outs[b])]))
+                for b in self._order}
+            for a in self._order}
+        return matrix, outs

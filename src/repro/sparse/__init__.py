@@ -46,5 +46,5 @@ from repro.sparse.formats import BitMask, SparseTensor  # noqa: F401
 from repro.sparse.pack import pack_mask_tree, pack_nm, unpack_mask_tree  # noqa: F401
 from repro.sparse.bank import MaskBank  # noqa: F401
 from repro.sparse.apply import (  # noqa: F401
-    compressed_report, sparse_dense, sparse_dense2, sparse_moe_dense,
-    sparsify_params)
+    compressed_report, shared_leaves, sparse_dense, sparse_dense2,
+    sparse_moe_dense, sparsify_params)

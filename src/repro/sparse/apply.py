@@ -228,6 +228,24 @@ def sparsify_params(params: PyTree, masks: PyTree, *, axes: PyTree = None,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def shared_leaves(params0: PyTree, tree: PyTree) -> int:
+    """How many of ``tree``'s leaves are ``params0``'s buffers, unchanged.
+
+    Pruning replaces only the pruned kernels (SparseTensor or ``W * mask``);
+    every None-mask leaf - embeddings, norms, biases - must pass through by
+    object identity, so N budget variants built from one ``params0`` share
+    ONE copy of the untouched leaves instead of N.  This is the fleet's
+    memory-sharing invariant; SparseTensor leaves are new storage by
+    definition and never count.
+    """
+    ids = {id(leaf) for leaf in jax.tree.leaves(params0)}
+    return sum(
+        id(leaf) in ids
+        for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, SparseTensor))
+        if not isinstance(leaf, SparseTensor))
+
+
 def _is_nm(mask: jax.Array, m: int = 4, n: int = 2) -> bool:
     """Host-side check: exactly n kept per contiguous group of m."""
     if mask.shape[-2] % m:

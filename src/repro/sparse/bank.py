@@ -79,6 +79,13 @@ class MaskBank:
         self.V = V
         self.stats = stats
         self.meta = meta
+        # budget-key -> exported keep-mask tree.  Re-thresholding is a full
+        # pass over the calibration state (global quantile of |Gamma|), so a
+        # fleet building one engine per budget - or repeated sparse_params
+        # calls at the same budget - must threshold once per budget, not
+        # once per caller.  Mask trees are immutable jax arrays: sharing the
+        # cached tree across callers is safe.
+        self._mask_cache: dict[tuple, PyTree] = {}
 
     # -- persistence ---------------------------------------------------------
 
@@ -138,20 +145,31 @@ class MaskBank:
         sparsity: unstructured global budget; nm: (n, m) semi-structured.
         With neither, the bank's calibrated PruneConfig decides (nm mode ->
         its n:m pattern; unstructured requires an explicit sparsity).
+
+        Memoized per budget: the first call at a given (sparsity | nm) key
+        runs the quantile pass over the calibration state, repeats return
+        the cached mask tree (jax arrays, immutable).
         """
         from repro.core import mirror
         pcfg = self.pcfg
         if nm is not None:
             pcfg = dataclasses.replace(pcfg, mode="nm", nm_n=nm[0],
                                        nm_m=nm[1])
+            key = ("nm", (int(nm[0]), int(nm[1])))
         elif sparsity is not None:
             pcfg = dataclasses.replace(pcfg, mode="unstructured")
+            key = ("unstructured", float(sparsity))
         else:
             assert pcfg.mode == "nm", \
                 "unstructured bank needs an explicit sparsity"
-        return mirror.export_masks(
-            pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
-            V=self.V)
+            key = ("nm", (int(pcfg.nm_n), int(pcfg.nm_m)))
+        masks = self._mask_cache.get(key)
+        if masks is None:
+            masks = mirror.export_masks(
+                pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
+                V=self.V)
+            self._mask_cache[key] = masks
+        return masks
 
     def masks_grid(self, sparsities: Iterable[float]) -> dict[float, PyTree]:
         return {s: self.masks_at(sparsity=s) for s in sparsities}

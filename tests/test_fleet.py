@@ -1,0 +1,165 @@
+"""Multi-budget sparsity fleet: one mask bank, N budgets, one router."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig, get_smoke_config
+from repro.core import calibrate
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.fleet import (Budget, SparsityFleet, parse_budget,
+                               token_agreement)
+from repro.sparse import apply as apply_mod
+from repro.sparse.bank import MaskBank
+
+CFG = get_smoke_config("llama3.2-1b")
+BUDGETS = ["0.0", "0.5", "2:4"]
+
+
+@pytest.fixture(scope="module")
+def bank_setup(tmp_path_factory):
+    params = M.init_params(CFG, jax.random.key(0))
+    calib = batches_for(CFG, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    stats = calibrate.collect_stats(CFG, params, calib)
+    state, _ = calibrate.run_search(CFG, pcfg, params, calib, stats)
+    d = tmp_path_factory.mktemp("fleet") / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    return params, d
+
+
+def test_parse_budget_spellings():
+    assert parse_budget("2:4") == Budget("nm", nm=(2, 4))
+    assert parse_budget((4, 8)) == Budget("nm", nm=(4, 8))
+    assert parse_budget("0.5") == Budget("unstructured", sparsity=0.5)
+    assert parse_budget(0.75).name == "0.75"
+    for dense in ("0.0", "0", 0, 0.0, "dense"):
+        assert parse_budget(dense) == Budget("dense")
+    assert parse_budget("2:4").pruned_frac == 0.5
+    assert parse_budget("0.75").pruned_frac == 0.75
+    with pytest.raises(ValueError):
+        parse_budget("1.5")
+    assert token_agreement([1, 2, 3], [1, 9, 3]) == pytest.approx(2 / 3)
+    assert token_agreement([1, 2], [1, 2, 3]) == pytest.approx(2 / 3)
+
+
+def test_fleet_routes_each_budget_to_its_own_engine(bank_setup):
+    """Tagged requests must return tokens from the engine serving THAT
+    budget - each member token-identical to a standalone engine built from
+    the same bank at the same budget, and the 0.0 member to a plain dense
+    engine over params0 (the acceptance oracle)."""
+    params, d = bank_setup
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=6,
+                                        capacity=32)
+    # one calibration state load, one threshold pass per non-dense budget
+    assert len(fleet.bank._mask_cache) == 2
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11])]
+    rids = {n: [fleet.submit(p, 5, budget=n) for p in prompts]
+            for n in BUDGETS}
+    res = fleet.run()
+    outs = {n: [res[r] for r in rids[n]] for n in BUDGETS}
+
+    bank = MaskBank.load(d)
+    oracles = {
+        "0.0": params,
+        "0.5": bank.sparse_params(params, sparsity=0.5, compressed=False),
+        "2:4": bank.sparse_params(params, nm=(2, 4), compressed=True),
+    }
+    for name, p in oracles.items():
+        eng = ServeEngine(CFG, p, slots=2, capacity=32)
+        want = [eng.submit(pr, 5) for pr in prompts]
+        got = eng.run()
+        assert outs[name] == [got[r] for r in want], name
+    # every stream decoded to full length through its own member
+    assert all(len(o) == 5 for n in BUDGETS for o in outs[n])
+
+
+def test_fleet_materialization_is_shared_and_memoized(bank_setup):
+    """Dense leaves pruning leaves untouched are the SAME buffers across
+    members (one copy, not N); the dense member is params0 itself; repeated
+    materialization at one budget returns the cached tree."""
+    params, d = bank_setup
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=3,
+                                        capacity=32)
+    assert fleet.engines["0.0"].params is params
+    n_leaves = len(jax.tree.leaves(params))
+    for name in ("0.5", "2:4"):
+        sp = fleet.engines[name].params
+        shared = apply_mod.shared_leaves(params, sp)
+        assert 0 < shared < n_leaves  # embeddings/norms shared, kernels not
+        assert fleet.reports[name]["shared_dense_leaves"] == shared
+    assert fleet.reports["2:4"]["weight_bytes_ratio"] <= 9 / 16 + 1e-9
+    assert fleet.reports["0.5"]["weight_bytes_ratio"] <= 1.0 + 1e-9
+    # the threshold pass is memoized in the BANK: a second fleet over the
+    # same bank re-uses the cached mask trees (no new quantile passes)
+    before = dict(fleet.bank._mask_cache)
+    SparsityFleet(fleet.bank, params, BUDGETS, slots=3, capacity=32)
+    assert {k: id(v) for k, v in fleet.bank._mask_cache.items()} == \
+        {k: id(v) for k, v in before.items()}
+
+
+def test_fleet_ab_split_is_deterministic_and_scores_agreement(bank_setup):
+    """ab= weights split traffic deterministically (weighted fair, no RNG)
+    and off-reference picks are mirrored onto the densest member so the
+    report carries live token-agreement."""
+    params, d = bank_setup
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=3,
+                                        capacity=32)
+    prompt = np.array([5, 6, 7, 8])
+    ab = {"0.5": 3.0, "2:4": 1.0}
+    rids = [fleet.submit(prompt, 3, ab=ab) for _ in range(8)]
+    res = fleet.run()
+    assert all(len(res[r]) == 3 for r in rids)
+    rep = fleet.report()["budgets"]
+    assert rep["0.5"]["requests"] == 6 and rep["2:4"]["requests"] == 2
+    assert rep["0.0"]["requests"] == 0  # shadows are not routed requests
+    # every A/B request was scored against the dense reference
+    for name in ("0.5", "2:4"):
+        agree = rep[name]["token_agreement_vs_reference"]
+        assert agree is not None and 0.0 <= agree <= 1.0
+    with pytest.raises(KeyError):
+        fleet.submit(prompt, 3, ab={"0.9": 1.0})
+    with pytest.raises(ValueError):
+        fleet.submit(prompt, 3, budget="0.5", ab=True)
+
+
+def test_fleet_eos_frees_slot_and_reuses_it(bank_setup):
+    """eos emitted on the FIRST decode step must free the member's slot and
+    the queued request admitted into it must decode with no state leak -
+    identical to a fresh single-budget engine with the same eos."""
+    params, d = bank_setup
+    p1, p2 = np.array([5, 6, 7, 8]), np.array([9, 10, 11])
+    probe = SparsityFleet.from_artifact(d, params, BUDGETS, slots=3,
+                                        capacity=32)
+    r = probe.submit(p1, 8, budget="2:4")
+    base = probe.run()[r]
+    eos = base[0]  # the first token the 2:4 stream emits
+
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=3,
+                                        capacity=32, eos_id=eos)
+    r1 = fleet.submit(p1, 8, budget="2:4")   # terminates on step 1
+    r2 = fleet.submit(p2, 4, budget="2:4")   # queued: member has ONE slot
+    out = fleet.run()
+    assert out[r1] == [eos]                  # freed on the first decode step
+    assert len(out[r2]) == 4
+    bank = MaskBank.load(d)
+    fresh = ServeEngine(CFG, bank.sparse_params(params, nm=(2, 4)),
+                        slots=1, capacity=32, eos_id=eos)
+    rf = fresh.submit(p2, 4)
+    assert fresh.run()[rf] == out[r2]        # reused slot leaked nothing
+
+
+def test_fleet_slot_pool_partition(bank_setup):
+    params, d = bank_setup
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=7,
+                                        capacity=32)
+    assert [fleet.engines[n].slots for n in BUDGETS] == [3, 2, 2]
+    with pytest.raises(ValueError, match="slots"):
+        SparsityFleet.from_artifact(d, params, BUDGETS, slots=2, capacity=32)
+    with pytest.raises(ValueError, match="duplicate"):
+        SparsityFleet.from_artifact(d, params, ["0.5", 0.5], capacity=32)
+    # all members share ONE EngineFns: the jitted entry points are shared
+    fns = {id(fleet.engines[n].fns) for n in BUDGETS}
+    assert len(fns) == 1

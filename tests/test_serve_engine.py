@@ -1,10 +1,11 @@
 """Continuous-batching serve engine."""
 import jax
 import numpy as np
+import pytest
 
 from repro.configs.base import get_smoke_config
 from repro.models import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import EngineFns, ServeEngine
 
 
 def test_prefill_padding_respects_sliding_window_ring():
@@ -86,6 +87,76 @@ def test_eos_terminates_slot_and_reuses_it_midbatch():
     assert eng_cfg.eos_id == eos
     rc = eng_cfg.submit(p1, 8)
     assert eng_cfg.run()[rc] == out[r1]
+
+
+def test_submit_rejects_empty_prompt_without_wedging_a_slot():
+    """A zero-length prompt used to IndexError inside _prefill_slot AFTER
+    the slot was claimed, wedging it forever; it must be rejected at
+    submit() and leave the engine fully serviceable."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.array([], np.int32), 4)
+    assert not eng.pending and all(r is None for r in eng.active)
+    # the engine still serves: the rejected request claimed nothing
+    rid = eng.submit(np.array([5, 6, 7]), 3)
+    assert len(eng.run()[rid]) == 3
+
+
+def test_max_tokens_zero_and_one():
+    """max_tokens=0 used to emit 1 token (appended before the length check)
+    and burn a decode step; it must short-circuit at submit.  max_tokens=1
+    emits exactly one."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    r0 = eng.submit(np.array([5, 6, 7]), 0)
+    r1 = eng.submit(np.array([5, 6, 7]), 1)
+    out = eng.run()
+    assert out[r0] == [] and len(out[r1]) == 1
+    # a lone zero-token request completes without claiming a slot or
+    # stepping the model (positions untouched)
+    eng2 = ServeEngine(cfg, params, slots=1, capacity=32)
+    rz = eng2.submit(np.array([1, 2]), 0)
+    assert eng2.run() == {rz: []}
+    assert (eng2.pos == 0).all() and all(r is None for r in eng2.active)
+
+
+def test_submit_rejects_prompt_at_capacity():
+    """A prompt needing >= capacity prefill rows used to trip a bare assert
+    inside the run() loop (gone under python -O), killing every in-flight
+    request; it must raise at submit() and leave other requests unharmed."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=8)
+    ok = eng.submit(np.arange(1, 5), 3)         # fits
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.arange(1, 10), 3)         # 9 tokens -> 8 rows == cap
+    out = eng.run()
+    assert len(out[ok]) == 3 and len(out) == 1
+
+
+def test_shared_engine_fns_match_per_engine_build():
+    """Two engines sharing one EngineFns (the fleet construction) must
+    decode token-identically to engines that build their own."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    fns = EngineFns(cfg, 32, "fused")
+    prompts = [np.array([5, 6, 7, 8]), np.array([9, 10, 11])]
+    outs = []
+    for shared in (fns, None):
+        toks = []
+        for p in prompts:
+            eng = ServeEngine(cfg, params, slots=1, capacity=32, fns=shared)
+            rid = eng.submit(p, 4)
+            toks.append(eng.run()[rid])
+        outs.append(toks)
+    assert outs[0] == outs[1]
+    # shared prefill cache serves both engines (one bucket, one entry)
+    assert set(fns.prefill_fns) == {8}
+    with pytest.raises(ValueError, match="EngineFns"):
+        ServeEngine(cfg, params, slots=1, capacity=64, fns=fns)  # mismatch
 
 
 def test_engine_batching_invariance():

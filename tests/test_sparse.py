@@ -304,6 +304,34 @@ def test_bank_sparse_params_serve(calibrated, tmp_path):
     assert len(out) == 4
 
 
+def test_bank_masks_at_memoizes_per_budget(calibrated, tmp_path,
+                                           monkeypatch):
+    """Identical budgets must not re-threshold the calibration state: one
+    export_masks pass per (sparsity | nm) key, repeats return the cached
+    tree (so fleet construction and repeated sparse_params calls are
+    one-shot per budget)."""
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    bank = MaskBank.load(d)
+    calls = []
+    real = mirror.export_masks
+    monkeypatch.setattr(mirror, "export_masks",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    m1 = bank.masks_at(sparsity=0.5)
+    m2 = bank.masks_at(sparsity=0.5)
+    assert m1 is m2 and len(calls) == 1
+    bank.masks_at(sparsity=0.6)
+    assert len(calls) == 2
+    # the calibrated N:M default and an explicit nm=(2, 4) share one key
+    m3 = bank.masks_at()
+    assert bank.masks_at(nm=(2, 4)) is m3 and len(calls) == 3
+    # sparse_params at a cached budget re-uses the masks (no new pass)
+    bank.sparse_params(params, nm=(2, 4), compressed=False)
+    assert len(calls) == 3
+
+
 def test_bank_saved_without_stats_loads_clean(calibrated, tmp_path):
     """The checksum must be structure-insensitive: load rebuilds the tree
     through the full params template, expanding a saved stats=None into a
@@ -466,4 +494,4 @@ def test_engine_chunked_prefill_single_compile_per_bucket():
     for p in ([1, 2, 3], [4, 5, 6, 7], [8, 9]):  # all pad to one bucket
         eng.submit(np.array(p), 2)
     eng.run()
-    assert set(eng._prefill_fns) == {8}  # bucketed: one jitted prefill
+    assert set(eng.fns.prefill_fns) == {8}  # bucketed: one jitted prefill
