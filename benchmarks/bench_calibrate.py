@@ -1,0 +1,132 @@
+"""Calibration-pipeline bench: the mesh-native stats + search refactor.
+
+Tracked per PR as ``results/bench/BENCH_calibrate.json`` and gated by
+``benchmarks/run.py --smoke``:
+
+* stats-pass throughput (calibration tok/s) for the jitted sharded pass vs
+  the eager tape oracle, plus the parity flag between the two (the shared
+  ``calibrate.stats_parity`` criterion the test suite enforces),
+* mirror-descent search steps/s, eager one-dispatch-per-step vs the
+  ``lax.scan``-chunked jitted path with donated state buffers - measured
+  MARGINALLY (time difference between a long and a short run of the same
+  compiled program shape) so jit compile time cancels out of the metric,
+* the search's resident memory: live device bytes after the scanned search
+  and the SearchState's own three-fp32-trees footprint (the budget the
+  sharded state distributes at mesh scale).
+
+CPU numbers are functional; the scanned-vs-eager ratio and the state-bytes
+footprint are the trajectory tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.table8_inference import write_serve_json
+
+
+def _live_bytes() -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.live_arrays())
+
+
+def calibrate_bench(out_rows: list, *, arch: str = "llama3.2-1b",
+                    steps: int = 8) -> dict:
+    import dataclasses
+
+    from repro.configs.base import PruneConfig, get_smoke_config
+    from repro.core import calibrate, mirror
+    from repro.core.prunable import prunable_map
+    from repro.data.synthetic import batches_for
+    from repro.models import model as M
+
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=4, batch=2, seq=32, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=steps,
+                       stats_batches=4)
+    tokens = sum(int(np.asarray(b["tokens"]).size) for b in calib)
+
+    def timed_stats(impl):
+        calibrate.collect_stats(cfg, params, calib, pcfg=pcfg,
+                                impl=impl)  # warm the jit cache
+        t0 = time.perf_counter()
+        stats = calibrate.collect_stats(cfg, params, calib, pcfg=pcfg,
+                                        impl=impl)
+        jax.block_until_ready([x for x in jax.tree.leaves(
+            stats, is_leaf=lambda x: x is None) if x is not None])
+        return stats, time.perf_counter() - t0
+
+    jit_stats, t_jit = timed_stats("jit")
+    tape_stats, t_tape = timed_stats("tape")
+    worst_fro, parity, n_leaves = calibrate.stats_parity(
+        tape_stats, jit_stats, prunable_map(params))
+
+    def timed_search(n_steps, chunk):
+        p = dataclasses.replace(pcfg, steps=n_steps)
+        t0 = time.perf_counter()
+        state, _ = calibrate.run_search(cfg, p, params, calib, jit_stats,
+                                        scan_chunk=chunk)
+        jax.block_until_ready(state.step)
+        return time.perf_counter() - t0
+
+    # marginal steps/s: run_search builds fresh jits per call, so a single
+    # timing is dominated by trace+compile.  Timing N and 2N steps of the
+    # SAME program shape (eager: per-step program; scanned: a fixed
+    # `steps`-long scan chunk) and differencing cancels the compile cost,
+    # leaving pure dispatch/execute throughput.
+    t_eager = timed_search(2 * steps, 0) - timed_search(steps, 0)
+    t_scan = timed_search(2 * steps, steps) - timed_search(steps, steps)
+    t_eager, t_scan = max(t_eager, 1e-9), max(t_scan, 1e-9)
+
+    # resident footprint, not an in-flight peak: live arrays after the
+    # search plus the SearchState's own three-fp32-trees budget (what
+    # search_state_sharding distributes on a real mesh)
+    state_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(
+            mirror.init_search(params, jax.random.key(17)),
+            is_leaf=lambda x: x is None)
+        if x is not None and hasattr(x, "shape"))
+    live_after = _live_bytes()
+
+    result = {
+        "arch": arch, "backend": jax.default_backend(),
+        "calib_tokens": tokens, "stats_batches": pcfg.stats_batches,
+        "stats_tok_s_jit": tokens / max(t_jit, 1e-9),
+        "stats_tok_s_tape": tokens / max(t_tape, 1e-9),
+        "stats_parity_worst_rel_fro": worst_fro,
+        "stats_parity_leaves": n_leaves,
+        "tape_parity": parity,
+        "search_steps": steps,
+        "search_steps_s_eager": steps / t_eager,
+        "search_steps_s_scanned": steps / t_scan,
+        "scanned_vs_eager": t_eager / t_scan,
+        "search_state_bytes": int(state_bytes),
+        "live_bytes_after_search": int(live_after),
+    }
+    print(f"\n=== calibrate bench ({arch} smoke, "
+          f"{jax.default_backend()}) ===")
+    print(f"stats: jit {result['stats_tok_s_jit']:.0f} tok/s vs tape "
+          f"{result['stats_tok_s_tape']:.0f} tok/s; parity "
+          f"{parity} (worst rel fro {worst_fro:.2e} over "
+          f"{n_leaves} prunable leaves)")
+    print(f"search: scanned {result['search_steps_s_scanned']:.2f} steps/s "
+          f"vs eager {result['search_steps_s_eager']:.2f} steps/s "
+          f"({result['scanned_vs_eager']:.2f}x, marginal); search state "
+          f"{state_bytes / 1e6:.1f} MB, live after "
+          f"{live_after / 1e6:.1f} MB")
+    out_rows.append({"table": "calibrate", **result})
+    return result
+
+
+def run(out_rows: list) -> None:
+    calibrate_bench(out_rows)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = calibrate_bench(rows)
+    print("wrote", write_serve_json(res, name="BENCH_calibrate.json"))

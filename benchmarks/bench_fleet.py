@@ -1,7 +1,8 @@
 """Sparsity-fleet bench: ONE bank artifact -> N budgets behind one router.
 
 Exercises the full §4.3 serving story end-to-end on the smoke config:
-calibrate once, persist the mask bank, then ``SparsityFleet.from_artifact``
+calibrate once through ``launch.calibrate`` (which persists the mask
+bank), then ``SparsityFleet.from_artifact``
 materializes dense (0.0), unstructured-0.5 (masked-dense), and 2:4
 (compressed kernels) members that serve concurrently.  Tracked per PR as
 ``results/bench/BENCH_fleet.json`` and gated by ``benchmarks/run.py
@@ -32,23 +33,21 @@ BUDGETS = ["0.0", "0.5", "2:4"]
 def fleet_bench(out_rows: list, *, arch: str = "llama3.2-1b",
                 steps: int = 6) -> dict:
     from repro.configs.base import PruneConfig, get_smoke_config
-    from repro.core import calibrate
     from repro.data.synthetic import batches_for
+    from repro.launch import calibrate as launch_cal
     from repro.models import model as M
     from repro.serve.engine import ServeEngine
     from repro.serve.fleet import SparsityFleet
-    from repro.sparse.bank import MaskBank
 
     cfg = get_smoke_config(arch)
     params = M.init_params(cfg, jax.random.key(0))
     calib = batches_for(cfg, n=2, batch=2, seq=16, split="calib")
     pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
-    stats = calibrate.collect_stats(cfg, params, calib)
-    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
     with tempfile.TemporaryDirectory() as td:
         bank_dir = td + "/bank"
-        MaskBank.save(bank_dir, arch=arch, smoke=True, state=state,
-                      stats=stats, pcfg=pcfg)
+        launch_cal.calibrate_to_bank(bank_dir, cfg=cfg, pcfg=pcfg,
+                                     params=params, calib=calib, arch=arch,
+                                     smoke=True)
         fleet = SparsityFleet.from_artifact(bank_dir, params, BUDGETS,
                                             slots=6, capacity=32)
 

@@ -1,10 +1,15 @@
-"""Paper Fig. 2: robustness at 70% sparsity across methods/models."""
+"""Paper Fig. 2: robustness at 70% sparsity across methods/models.
+
+Consumes the SAME per-family MaskBank artifacts as table1 (one shared
+unstructured calibration), re-thresholded at 70% - the bank's one-shot
+multi-budget property across benchmark modules."""
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import FAMILIES, evaluate, fmt_row, get_trained
-from repro.configs.base import PruneConfig
+from benchmarks.common import FAMILIES, evaluate, fmt_row, get_bank, \
+    get_trained
+from benchmarks.table1_unstructured import PCFG
 from repro.core import calibrate, masks as masks_mod
 from repro.data.synthetic import batches_for
 
@@ -17,18 +22,16 @@ def run(out_rows: list) -> None:
     for fam in FAMILIES:
         cfg, params = get_trained(fam)
         calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
-        stats = calibrate.collect_stats(cfg, params, calib[:3])
+        bank = get_bank(fam, cfg, params, PCFG, calib, tag="unstructured")
         for m in ["magnitude", "wanda", "ria"]:
-            mask = calibrate.baseline_masks(m, params, stats, SP,
+            mask = calibrate.baseline_masks(m, params, bank.stats, SP,
                                             key=jax.random.key(5))
             r = evaluate(cfg, masks_mod.apply_masks(params, mask))
             print(fmt_row([fam, m, f"{r['ppl']:.2f}"]))
             out_rows.append({"table": "fig2", "model": fam, "method": m,
                              "ppl": r["ppl"]})
-        pcfg = PruneConfig(local_metric="stochria", steps=60)
-        pruned, _, _ = calibrate.unipruning_prune(cfg, pcfg, params, calib,
-                                                  sparsities=[SP])
-        r = evaluate(cfg, pruned[SP])
+        r = evaluate(cfg, masks_mod.apply_masks(params,
+                                                bank.masks_at(sparsity=SP)))
         print(fmt_row([fam, "unipruning", f"{r['ppl']:.2f}"]))
         out_rows.append({"table": "fig2", "model": fam,
                          "method": "unipruning", "ppl": r["ppl"]})

@@ -13,7 +13,10 @@ and the same token parities; the fleet bench must produce
 ``results/bench/BENCH_fleet.json`` with one mask bank serving >= 3 budgets
 (thresholded once per non-dense budget), every member's weight-byte ratio
 <= dense (the 2:4 member at the 9/16 bound), and the 0.0-budget member
-token-identical to a plain dense engine - and exits non-zero otherwise.
+token-identical to a plain dense engine; the calibrate bench must produce
+``results/bench/BENCH_calibrate.json`` with the jitted sharded stats pass
+matching the eager tape oracle (parity flag) and live scanned-vs-eager
+search steps/s - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
@@ -78,10 +81,26 @@ def smoke() -> None:
             f"agreement matrix row {name} missing members: {sorted(row)}")
         assert all(0.0 <= v <= 1.0 for v in row.values()), row
 
+    from benchmarks import bench_calibrate
+
+    cal = bench_calibrate.calibrate_bench(rows)
+    cal_path = table8_inference.write_serve_json(
+        cal, name="BENCH_calibrate.json")
+    assert cal_path.exists(), cal_path
+    assert cal["tape_parity"], (
+        f"jitted sharded stats diverged from the tape oracle: worst "
+        f"relative Frobenius error {cal['stats_parity_worst_rel_fro']:.3e} "
+        f"over {cal['stats_parity_leaves']} prunable leaves")
+    assert cal["stats_parity_leaves"] > 0, "stats parity checked no leaves"
+    assert cal["search_steps_s_scanned"] > 0 and \
+        cal["search_steps_s_eager"] > 0, cal
+
     print(f"smoke ok: wrote {path} (ratio {ratio:.4f}), {moe_path} "
           f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
-          f"kernel-native) and {fleet_path} "
-          f"({len(fleet['budgets'])} budgets from one bank)")
+          f"kernel-native), {fleet_path} "
+          f"({len(fleet['budgets'])} budgets from one bank) and {cal_path} "
+          f"(scanned search {cal['scanned_vs_eager']:.2f}x eager, stats "
+          "parity ok)")
 
 
 def main() -> None:
@@ -91,7 +110,8 @@ def main() -> None:
     if ap.parse_args().smoke:
         smoke()
         return
-    from benchmarks import (bench_fleet, fig2_high_sparsity, oneshot_export,
+    from benchmarks import (bench_calibrate, bench_fleet,
+                            fig2_high_sparsity, oneshot_export,
                             table1_unstructured, table2_semistructured,
                             table4_local_metric, table5_mirror_ablation,
                             table8_inference)
@@ -101,7 +121,7 @@ def main() -> None:
     for mod in [table1_unstructured, table2_semistructured,
                 table4_local_metric, table5_mirror_ablation,
                 fig2_high_sparsity, table8_inference, bench_fleet,
-                oneshot_export]:
+                bench_calibrate, oneshot_export]:
         name = mod.__name__.split(".")[-1]
         t0 = time.time()
         mod.run(rows)
@@ -121,6 +141,10 @@ def main() -> None:
     if fleet_rows:
         table8_inference.write_serve_json(fleet_rows[0],
                                           name="BENCH_fleet.json")
+    cal_rows = [r for r in rows if r.get("table") == "calibrate"]
+    if cal_rows:
+        table8_inference.write_serve_json(cal_rows[0],
+                                          name="BENCH_calibrate.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

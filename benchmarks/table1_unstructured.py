@@ -1,21 +1,27 @@
 """Paper Table 1: 60% unstructured sparsity across model families x methods.
 
 Reports PPL + accuracy stand-ins for Magnitude / Wanda / RIA / stochRIA
-one-shot baselines (each with its paper's comparison scope) and UniPruning
-(one mirror-descent search, global budget)."""
+one-shot baselines (each with its paper's comparison scope) and UniPruning.
+Calibration comes from the shared per-family MaskBank artifact
+(``common.get_bank`` -> ``launch.calibrate``): baselines read the bank's
+persisted activation stats, UniPruning re-thresholds the bank's Gamma/V -
+no inline stats/search runs here."""
 from __future__ import annotations
 
 import time
 
 import jax
 
-from benchmarks.common import FAMILIES, evaluate, fmt_row, get_trained
+from benchmarks.common import FAMILIES, evaluate, fmt_row, get_bank, \
+    get_trained
 from repro.configs.base import PruneConfig
 from repro.core import calibrate, masks as masks_mod
 from repro.data.synthetic import batches_for
 
 SPARSITY = 0.6
 METHODS = ["magnitude", "wanda", "ria", "stochria"]
+# ONE unstructured search per family, shared with fig2 + oneshot_export
+PCFG = PruneConfig(local_metric="stochria", steps=60)
 
 
 def run(out_rows: list) -> None:
@@ -27,21 +33,21 @@ def run(out_rows: list) -> None:
         print(fmt_row([fam, "dense", f"{dense['ppl']:.2f}",
                        f"{dense['acc']:.3f}", f"{dense['ind']:.3f}"]))
         calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
-        stats = calibrate.collect_stats(cfg, params, calib[:3])
+        t0 = time.time()
+        bank = get_bank(fam, cfg, params, PCFG, calib, tag="unstructured")
+        t_cal = time.time() - t0
         for m in METHODS:
-            mask = calibrate.baseline_masks(m, params, stats, SPARSITY,
+            mask = calibrate.baseline_masks(m, params, bank.stats, SPARSITY,
                                             key=jax.random.key(5))
             r = evaluate(cfg, masks_mod.apply_masks(params, mask))
             print(fmt_row([fam, m, f"{r['ppl']:.2f}", f"{r['acc']:.3f}",
                            f"{r['ind']:.3f}"]))
             out_rows.append({"table": 1, "model": fam, "method": m, **r})
-        t0 = time.time()
-        pcfg = PruneConfig(local_metric="stochria", steps=60)
-        pruned, state, _ = calibrate.unipruning_prune(
-            cfg, pcfg, params, calib, sparsities=[SPARSITY])
-        r = evaluate(cfg, pruned[SPARSITY])
+        pruned = masks_mod.apply_masks(params,
+                                       bank.masks_at(sparsity=SPARSITY))
+        r = evaluate(cfg, pruned)
         print(fmt_row([fam, "unipruning", f"{r['ppl']:.2f}",
                        f"{r['acc']:.3f}", f"{r['ind']:.3f}",
-                       f"({time.time()-t0:.0f}s search)"]))
+                       f"({t_cal:.0f}s calibrate-or-load)"]))
         out_rows.append({"table": 1, "model": fam, "method": "unipruning",
                          **r})

@@ -2,17 +2,20 @@
 
 Baselines take top-2-of-4 on their local metric; UniPruning adds the
 R_{2:4} prox on W during search (Algorithm 1 N:M branch) and exports the
-2:4 mask from Gamma."""
+2:4 mask from Gamma.  Calibration state (stats + Gamma/V) comes from the
+per-family N:M MaskBank artifact - no inline stats/search runs here."""
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import FAMILIES, evaluate, fmt_row, get_trained
+from benchmarks.common import FAMILIES, evaluate, fmt_row, get_bank, \
+    get_trained
 from repro.configs.base import PruneConfig
 from repro.core import calibrate, masks as masks_mod
 from repro.data.synthetic import batches_for
 
 METHODS = ["magnitude", "wanda", "ria"]
+PCFG = PruneConfig(local_metric="wanda", mode="nm", steps=60)
 
 
 def run(out_rows: list) -> None:
@@ -24,18 +27,16 @@ def run(out_rows: list) -> None:
         print(fmt_row([fam, "dense", f"{dense['ppl']:.2f}",
                        f"{dense['acc']:.3f}"]))
         calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
-        stats = calibrate.collect_stats(cfg, params, calib[:3])
+        bank = get_bank(fam, cfg, params, PCFG, calib, tag="nm")
         for m in METHODS:
-            mask = calibrate.baseline_masks(m, params, stats, 0.5,
+            mask = calibrate.baseline_masks(m, params, bank.stats, 0.5,
                                             mode="nm",
                                             key=jax.random.key(5))
             r = evaluate(cfg, masks_mod.apply_masks(params, mask))
             print(fmt_row([fam, m, f"{r['ppl']:.2f}", f"{r['acc']:.3f}"]))
             out_rows.append({"table": 2, "model": fam, "method": m, **r})
-        pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=60)
-        pruned, state, _ = calibrate.unipruning_prune(
-            cfg, pcfg, params, calib, sparsities=[0.5])
-        r = evaluate(cfg, pruned[0.5])
+        pruned = masks_mod.apply_masks(params, bank.masks_at())
+        r = evaluate(cfg, pruned)
         print(fmt_row([fam, "unipruning", f"{r['ppl']:.2f}",
                        f"{r['acc']:.3f}"]))
         out_rows.append({"table": 2, "model": fam, "method": "unipruning",

@@ -1,9 +1,12 @@
-"""Paper Table 4: UniPruning under different local metrics x sparsity."""
+"""Paper Table 4: UniPruning under different local metrics x sparsity.
+
+One MaskBank artifact per metric; the three budgets are one-shot
+re-thresholds of each bank - no inline stats/search runs here."""
 from __future__ import annotations
 
-from benchmarks.common import evaluate, fmt_row, get_trained
+from benchmarks.common import evaluate, fmt_row, get_bank, get_trained
 from repro.configs.base import PruneConfig
-from repro.core import calibrate
+from repro.core import masks as masks_mod
 from repro.data.synthetic import batches_for
 
 SPARSITIES = [0.5, 0.6, 0.7]
@@ -17,9 +20,11 @@ def run(out_rows: list) -> None:
     calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
     for m in METRICS:
         pcfg = PruneConfig(local_metric=m, steps=60)
-        pruned, _, _ = calibrate.unipruning_prune(
-            cfg, pcfg, params, calib, sparsities=SPARSITIES)
-        ppls = [evaluate(cfg, pruned[s])["ppl"] for s in SPARSITIES]
+        # the stochria search IS table1/fig2/oneshot's bank: share it
+        tag = "unstructured" if m == "stochria" else f"metric-{m}"
+        bank = get_bank("llama-tiny", cfg, params, pcfg, calib, tag=tag)
+        ppls = [evaluate(cfg, masks_mod.apply_masks(
+            params, bank.masks_at(sparsity=s)))["ppl"] for s in SPARSITIES]
         print(fmt_row([m] + [f"{p:.2f}" for p in ppls]))
         out_rows.append({"table": 4, "metric": m,
                          **{f"ppl{int(s*100)}": p

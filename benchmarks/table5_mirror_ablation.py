@@ -10,9 +10,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import evaluate, fmt_row, get_trained
+from benchmarks.common import evaluate, fmt_row, get_bank, get_trained
 from repro.configs.base import PruneConfig
-from repro.core import calibrate, masks as masks_mod, metrics as metrics_mod
+from repro.core import masks as masks_mod, metrics as metrics_mod
 from repro.core.mirror import no_mirror_step
 from repro.core.prunable import prunable_map
 from repro.data.synthetic import batches_for
@@ -46,12 +46,14 @@ def run(out_rows: list) -> None:
     print(fmt_row(["variant", "ppl@50%", "ppl@60%"]))
     cfg, params = get_trained("llama-tiny")
     calib = batches_for(cfg, n=10, batch=8, seq=128, split="calib")
-    stats = calibrate.collect_stats(cfg, params, calib[:3])
-
+    # the shared unstructured bank supplies both the UniPruning row and the
+    # activation stats the Eq. 8 ablation loop consumes
     pcfg = PruneConfig(local_metric="stochria", steps=60)
-    pruned, _, _ = calibrate.unipruning_prune(cfg, pcfg, params, calib,
-                                              sparsities=SPARSITIES)
-    ppls = [evaluate(cfg, pruned[s])["ppl"] for s in SPARSITIES]
+    bank = get_bank("llama-tiny", cfg, params, pcfg, calib,
+                    tag="unstructured")
+    stats = bank.stats
+    ppls = [evaluate(cfg, masks_mod.apply_masks(
+        params, bank.masks_at(sparsity=s)))["ppl"] for s in SPARSITIES]
     print(fmt_row(["unipruning"] + [f"{p:.2f}" for p in ppls]))
     out_rows.append({"table": 5, "variant": "unipruning",
                      "ppl50": ppls[0], "ppl60": ppls[1]})

@@ -13,7 +13,7 @@ import jax
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, PruneConfig
-from repro.core import calibrate, masks as masks_mod, mirror
+from repro.core import calibrate, masks as masks_mod
 from repro.data.synthetic import batches_for
 from repro.models import model as M
 from repro.optim import optimizers as opt
@@ -67,24 +67,33 @@ valid = batches_for(cfg, n=3, batch=batch, seq=seq, split="valid")
 print(f"dense PPL: {eval_ppl(cfg, params, valid):.2f}")
 
 # --- prune: baselines + UniPruning, unstructured + 2:4 -------------------
+# Both searches run ONCE through launch.calibrate and persist as MaskBank
+# artifacts; every budget below is a re-threshold of a saved bank, and the
+# baselines consume the bank's persisted activation stats.
+from repro.launch.calibrate import calibrate_to_bank
+
 calib = batches_for(cfg, n=12, batch=8, seq=seq, split="calib")
-stats = calibrate.collect_stats(cfg, params, calib[:3])
+pcfg = PruneConfig(local_metric="stochria", steps=60, stats_batches=3)
+bank = calibrate_to_bank(f"results/bank/{cfg.name}-unstructured", cfg=cfg,
+                         pcfg=pcfg, params=params, calib=calib,
+                         arch=cfg.name, smoke=False)
 for m in ["magnitude", "wanda", "ria"]:
-    mk = calibrate.baseline_masks(m, params, stats, 0.6)
+    mk = calibrate.baseline_masks(m, params, bank.stats, 0.6)
     print(f"{m:10s} 60% PPL: "
           f"{eval_ppl(cfg, masks_mod.apply_masks(params, mk), valid):.2f}")
 
-pcfg = PruneConfig(local_metric="stochria", steps=60)
-pruned, state, _ = calibrate.unipruning_prune(
-    cfg, pcfg, params, calib, sparsities=[0.5, 0.6, 0.7])
 for sp in [0.5, 0.6, 0.7]:
+    pruned = masks_mod.apply_masks(params, bank.masks_at(sparsity=sp))
     print(f"unipruning {int(sp*100)}% PPL: "
-          f"{eval_ppl(cfg, pruned[sp], valid):.2f}")
+          f"{eval_ppl(cfg, pruned, valid):.2f}")
 
-pcfg24 = PruneConfig(local_metric="wanda", mode="nm", steps=40)
-pruned24, st24, _ = calibrate.unipruning_prune(
-    cfg, pcfg24, params, calib, sparsities=[0.5])
-mk = mirror.export_masks(pcfg24, st24.Gamma, 0.5, V=st24.V)
-print(f"unipruning 2:4 PPL: {eval_ppl(cfg, pruned24[0.5], valid):.2f} "
+pcfg24 = PruneConfig(local_metric="wanda", mode="nm", steps=40,
+                     stats_batches=3)
+bank24 = calibrate_to_bank(f"results/bank/{cfg.name}-nm", cfg=cfg,
+                           pcfg=pcfg24, params=params, calib=calib,
+                           arch=cfg.name, smoke=False)
+mk = bank24.masks_at()
+pruned24 = masks_mod.apply_masks(params, mk)
+print(f"unipruning 2:4 PPL: {eval_ppl(cfg, pruned24, valid):.2f} "
       f"(sparsity {masks_mod.sparsity_of(mk):.3f})")
 print("done.")

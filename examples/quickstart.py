@@ -1,5 +1,8 @@
 """Quickstart: prune a small LM with UniPruning in ~2 minutes on CPU.
 
+Calibration runs once through ``launch.calibrate`` and lands as a MaskBank
+artifact; every budget afterwards is a one-shot re-threshold of it.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -39,18 +42,24 @@ for i in range(80):
 # 2. a calibration set (normally: 128 C4 samples)
 calib = batches_for(cfg, n=8, batch=8, seq=128, split="calib")
 
-# 3. UniPruning: stats -> mirror-descent search -> one-shot masks
-pcfg = PruneConfig(local_metric="stochria", steps=30)
-pruned, state, history = calibrate.unipruning_prune(
-    cfg, pcfg, params, calib, sparsities=[0.5, 0.7])
+# 3. UniPruning through the one entry point: jitted stats -> scanned
+#    mirror-descent search -> a persisted MaskBank artifact.  Any budget is
+#    then a one-shot re-threshold of the artifact - here, in another
+#    process, or on the serving mesh.
+from repro.launch.calibrate import calibrate_to_bank
+
+pcfg = PruneConfig(local_metric="stochria", steps=30, stats_batches=2)
+bank = calibrate_to_bank("results/bank/quickstart", cfg=cfg, pcfg=pcfg,
+                         params=params, calib=calib, arch=cfg.name,
+                         smoke=False)
 
 valid = batches_for(cfg, n=2, batch=8, seq=128, split="valid")
 print(f"dense  PPL: {eval_ppl(cfg, params, valid):.2f}")
-for sp, p in pruned.items():
+for sp in [0.5, 0.7]:
+    p = masks_mod.apply_masks(params, bank.masks_at(sparsity=sp))
     print(f"{int(sp*100)}%-sparse PPL: {eval_ppl(cfg, p, valid):.2f}")
 
-# 4. baselines share the same stats + mask machinery
-stats = calibrate.collect_stats(cfg, params, calib[:2])
-wanda = calibrate.baseline_masks("wanda", params, stats, 0.5)
+# 4. baselines share the bank's persisted stats + the mask machinery
+wanda = calibrate.baseline_masks("wanda", params, bank.stats, 0.5)
 print(f"wanda 50% PPL: "
       f"{eval_ppl(cfg, masks_mod.apply_masks(params, wanda), valid):.2f}")

@@ -1,13 +1,14 @@
 """Mask-bank round trip: calibrate ONCE, serve at FOUR budgets (paper §4.3
 + Table 8 scenario).
 
-Run 1 calibrates UniPruning inline and persists the post-calibration state
-(Gamma/V/stats/PruneConfig) as a mask-bank artifact.  Runs 2-4 never touch
-the mirror-descent search again: they load the bank, re-threshold to masks
-in one shot, and serve - first with 2:4-compressed weights executing
-through the nm_spmm kernel, then masked-dense for an A/B token check, then
-a sparsity FLEET serving dense + unstructured + 2:4 concurrently behind
-one router with weighted A/B traffic.
+Run 1 is the ``repro.launch.calibrate`` entry point: jitted sharded stats
+-> scanned mirror-descent search -> mask-bank artifact
+(Gamma/V/stats/PruneConfig).  Runs 2-4 never touch calibration again: they
+load the bank, re-threshold to masks in one shot, and serve - first with
+2:4-compressed weights executing through the nm_spmm kernel, then
+masked-dense for an A/B token check, then a sparsity FLEET serving dense +
+unstructured + 2:4 concurrently behind one router with weighted A/B
+traffic.
 
   PYTHONPATH=src python examples/serve_sparse.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_sparse.py --arch gemma2-2b \
@@ -35,8 +36,10 @@ sparsity = (["--sparsity", str(args.sparsity)]
             if args.sparsity is not None else [])
 
 runs = [
-    # 1: calibrate once, persist the bank
-    base + ["--sparse", "--save-artifact", artifact],
+    # 1: calibrate once (the single entry point), persist the bank
+    [sys.executable, "-m", "repro.launch.calibrate", "--arch", args.arch,
+     "--smoke", "--out", artifact, "--metric", "wanda", "--mode", "nm",
+     "--steps", "30", "--seq", "64"],
     # 2: serve compressed from the bank - no re-calibration
     base + ["--sparse-artifact", artifact] + sparsity,
     # 3: same masks, masked-dense weights - tokens must match run 2

@@ -153,3 +153,14 @@ class PruneConfig:
     score_norm: str = "median"
     nm_prox_weight: float = 1e-2     # strength of R_{2:4} prox on W
     stoch_frac: float = 0.9          # stochRIA row/col sampling fraction
+    # -- calibration-pipeline execution knobs (PR 5) ------------------------
+    # How many calibration batches feed the stats pass (the single source of
+    # truth for what used to be ad-hoc calib[:4] / calib[:3] slicing).
+    stats_batches: int = 4
+    # Mirror-descent steps per jitted lax.scan dispatch; <= 1 keeps the
+    # eager one-dispatch-per-step loop (debug / bench baseline).
+    scan_chunk: int = 8
+    # Microbatches per search step: the task gradient is accumulated over
+    # batch-dim slices of each calibration batch, shrinking activation
+    # memory at fixed effective batch.  1 = off.
+    grad_accum: int = 1

@@ -1,20 +1,33 @@
 """End-to-end UniPruning calibration drivers.
 
-collect_stats   - one eager, unrolled pass over the calibration set with the
-                  stats tape (Algorithm 1, line 1).
-run_search      - N jitted mirror-descent steps (lines 3-12).
+collect_stats   - activation stats over the calibration set (Algorithm 1,
+                  line 1).  impl="jit" (default): the mesh-shardable
+                  ``models.model.stats_sumsq`` pass, one compiled dispatch
+                  per batch with per-layer stats stacked by ``lax.scan``.
+                  impl="tape": the eager, unrolled StatsTape pass - the
+                  parity oracle, asserted against the jitted pass in tests.
+run_search      - N mirror-descent steps (lines 3-12), executed as
+                  ``lax.scan``-chunked jitted dispatches with donated state
+                  buffers; pass ``rules`` to run the whole search with
+                  W/Gamma/V sharded on the mesh via ``dist.sharding``.
 unipruning_prune- full pipeline: stats -> search -> Gamma -> masks(W0) at any
                   requested sparsity levels (one search, many budgets).
 baseline_masks  - one-shot local-metric baselines (Magnitude/Wanda/RIA/
                   stochRIA) sharing the same stats and mask machinery.
+
+Process-level entry point: ``repro.launch.calibrate`` runs stats -> search
+once and persists the result as a ``sparse.bank.MaskBank`` artifact that
+serving and the benchmarks consume without ever re-running this module.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import masks as masks_mod
@@ -26,43 +39,178 @@ from repro.optim.losses import lm_loss
 
 PyTree = Any
 
+_is_none = lambda x: x is None
 
-def collect_stats(cfg: ModelConfig, params: PyTree,
-                  batches: Iterable[dict]) -> PyTree:
-    t = tape_mod.StatsTape()
-    with tape_mod.recording(t):
+
+@functools.lru_cache(maxsize=None)
+def _jit_stats_fn(cfg: ModelConfig):
+    from repro.models import model as M
+    return jax.jit(lambda p, b: M.stats_sumsq(cfg, p, b))
+
+
+def collect_stats(cfg: ModelConfig, params: PyTree, batches: Iterable[dict],
+                  *, impl: str = "jit", pcfg: PruneConfig | None = None,
+                  rules=None) -> PyTree:
+    """Per-input-feature ||X_j||_2 over the calibration set.
+
+    pcfg: when given, only the first ``pcfg.stats_batches`` batches feed the
+    pass (the one place that policy lives).  rules: installed sharding rules
+    for the jitted pass - batches are device_put over the data axes and the
+    model's own constraints shard the activations.
+    """
+    batches = list(batches)
+    if pcfg is not None:
+        batches = batches[:pcfg.stats_batches]
+    assert batches, "collect_stats needs at least one calibration batch"
+
+    if impl == "tape":
+        t = tape_mod.StatsTape()
+        with tape_mod.recording(t):
+            for b in batches:
+                lm_loss(cfg, params, b, unroll=True)
+        return tape_mod.resolve_stats(t, params)
+    if impl != "jit":
+        raise ValueError(f"unknown stats impl {impl!r}; options: jit, tape")
+
+    from repro.dist import axes as axes_mod
+    from repro.dist import sharding as sharding_mod
+    from repro.models import model as M
+    fwd = _jit_stats_fn(cfg) if rules is None else \
+        jax.jit(lambda p, b: M.stats_sumsq(cfg, p, b))
+    ctx = axes_mod.use_rules(rules) if rules is not None else None
+    acc = None
+    try:
+        if ctx is not None:
+            ctx.__enter__()
         for b in batches:
-            lm_loss(cfg, params, b, unroll=True)
-    return tape_mod.resolve_stats(t, params)
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+            if rules is not None:
+                b = jax.device_put(b, sharding_mod.batch_sharding_tree(
+                    b, rules.mesh))
+            ss = fwd(params, b)
+            acc = ss if acc is None else jax.tree.map(
+                lambda a, s: None if a is None else a + s, acc, ss,
+                is_leaf=_is_none)
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+    return jax.tree.map(lambda a: None if a is None else jnp.sqrt(a),
+                        acc, is_leaf=_is_none)
+
+
+def stats_parity(tape_stats: PyTree, jit_stats: PyTree, prunable: PyTree,
+                 *, tol: float = 5e-2) -> tuple[float, bool, int]:
+    """(worst per-prunable-leaf relative Frobenius error, pass flag, leaves).
+
+    The shared parity criterion between the jitted pass and the tape
+    oracle, used by both the test suite and the calibrate bench gate.
+    Aggregate (not elementwise) on purpose: eager-vs-compiled execution can
+    flip MoE top-k routing for near-tied experts, moving single rows
+    between expert stats; the norm bounds that noise while catching real
+    bugs (e.g. a dropped per-expert rescale shifts whole rows ~2x).
+    """
+    worst = 0.0
+    checked = 0
+    for t, j, p in zip(jax.tree.leaves(tape_stats, is_leaf=_is_none),
+                       jax.tree.leaves(jit_stats, is_leaf=_is_none),
+                       jax.tree.leaves(prunable)):
+        if not p:
+            continue
+        assert t is not None, "tape missed a prunable leaf"
+        assert j is not None, "jitted pass missed a prunable leaf"
+        t, j = np.asarray(t, np.float64), np.asarray(j, np.float64)
+        assert t.shape == j.shape, (t.shape, j.shape)
+        worst = max(worst, float(np.linalg.norm(t - j) /
+                                 (np.linalg.norm(t) + 1e-12)))
+        checked += 1
+    return worst, bool(worst <= tol) and checked > 0, checked
+
+
+def _stack_chunk(batches: list[dict], start: int, length: int) -> dict:
+    """Host-side stack of the next ``length`` calibration batches (cycled)."""
+    sel = [batches[(start + j) % len(batches)] for j in range(length)]
+    return jax.tree.map(
+        lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])), *sel)
 
 
 def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
                batches: list[dict], stats: PyTree, *,
-               log_every: int = 0, loss_fn: Callable | None = None):
-    """Returns (final state, history)."""
+               log_every: int = 0, loss_fn: Callable | None = None,
+               rules=None, scan_chunk: int | None = None):
+    """Returns (final state, history).
+
+    The search runs as jitted ``lax.scan`` chunks of ``pcfg.scan_chunk``
+    steps (override with ``scan_chunk``; <= 1 falls back to one dispatch
+    per step) with the SearchState donated into each dispatch, so the three
+    fp32 trees are updated in place instead of double-buffered.  With
+    ``rules`` the state is placed via ``dist.sharding.search_state_sharding``
+    and every chunk's stacked batches shard over the data axes - W/Gamma/V
+    live distributed on the mesh for the whole search.
+    """
     prunable = prunable_map(params0)
     loss_fn = loss_fn or partial(lm_loss, cfg)
     state = mirror.init_search(params0, jax.random.key(17))
-    # prunable (static bools) and stats close over the jitted step
-    step_fn = jax.jit(lambda st, b: mirror.search_step(
-        pcfg, loss_fn, st, b, stats, prunable))
-    history = []
-    for n in range(pcfg.steps):
-        batch = batches[n % len(batches)]
-        state, m = step_fn(state, batch)
-        if log_every and n % log_every == 0:
-            history.append({k: float(v) for k, v in m.items()})
+    if rules is not None:
+        from repro.dist import sharding as sharding_mod
+        from repro.models import model as M
+        state = jax.device_put(state, sharding_mod.search_state_sharding(
+            M.param_axes(cfg), state, rules))
+    batches = list(batches)
+    chunk = pcfg.scan_chunk if scan_chunk is None else scan_chunk
+    chunk = max(int(chunk), 0)
+    history: list[dict] = []
+
+    def record(metrics_stack, start, length):
+        if not log_every:
+            return
+        host = {k: np.asarray(v) for k, v in metrics_stack.items()}
+        for j in range(length):
+            if (start + j) % log_every == 0:
+                history.append({k: float(v[j]) for k, v in host.items()})
+
+    if chunk <= 1:  # eager: one jitted dispatch per step
+        step_fn = jax.jit(
+            lambda st, b: mirror.search_step(pcfg, loss_fn, st, b, stats,
+                                             prunable),
+            donate_argnums=0)
+        for n in range(pcfg.steps):
+            state, m = step_fn(state, batches[n % len(batches)])
+            if log_every and n % log_every == 0:
+                history.append({k: float(v) for k, v in m.items()})
+        return state, history
+
+    def chunk_fn(st, stacked):
+        return jax.lax.scan(
+            lambda s, b: mirror.search_step(pcfg, loss_fn, s, b, stats,
+                                            prunable),
+            st, stacked)
+
+    chunk_jit = jax.jit(chunk_fn, donate_argnums=0)
+    n = 0
+    while n < pcfg.steps:
+        c = min(chunk, pcfg.steps - n)
+        stacked = _stack_chunk(batches, n, c)
+        if rules is not None:
+            from repro.dist import sharding as sharding_mod
+            stacked = jax.device_put(
+                stacked,
+                sharding_mod.stacked_batch_sharding(stacked, rules.mesh))
+        state, ms = chunk_jit(state, stacked)
+        record(ms, n, c)
+        n += c
     return state, history
 
 
 def unipruning_prune(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
                      calib_batches: list[dict],
                      sparsities: Iterable[float] = (0.5,),
-                     loss_fn: Callable | None = None):
+                     loss_fn: Callable | None = None, *,
+                     stats_impl: str = "jit", rules=None):
     """Full pipeline. Returns {sparsity: pruned_params}, Gamma, history."""
-    stats = collect_stats(cfg, params0, calib_batches[:4])
+    stats = collect_stats(cfg, params0, calib_batches, pcfg=pcfg,
+                          impl=stats_impl, rules=rules)
     state, history = run_search(cfg, pcfg, params0, calib_batches, stats,
-                                log_every=10, loss_fn=loss_fn)
+                                log_every=10, loss_fn=loss_fn, rules=rules)
     out = {}
     for s in sparsities:
         masks = mirror.export_masks(pcfg, state.Gamma, s, V=state.V)

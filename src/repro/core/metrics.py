@@ -107,6 +107,13 @@ def metric_tree(name: str, params: Any, stats: Any, prunable: Any,
     flat_stats, _ = jax.tree_util.tree_flatten(
         stats, is_leaf=lambda x: x is None)
     flat_pr, _ = jax.tree_util.tree_flatten(prunable)
+    # stats now come from two implementations (jitted pass / eager tape) and
+    # from persisted bank artifacts: refuse silent leaf misalignment.
+    if len(flat_stats) != len(leaves) or len(flat_pr) != len(leaves):
+        raise ValueError(
+            f"metric_tree leaf mismatch: params={len(leaves)} "
+            f"stats={len(flat_stats)} prunable={len(flat_pr)} leaves - the "
+            "stats/prunable trees must mirror the params structure")
     out = []
     for i, (w, a, pr) in enumerate(zip(leaves, flat_stats, flat_pr)):
         if not pr:

@@ -17,6 +17,7 @@ applied to W0 (core/masks.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Any, Callable
 
@@ -50,8 +51,11 @@ def _zeros_like_prunable(params: PyTree, prunable: PyTree) -> PyTree:
 
 def init_search(params0: PyTree, key: jax.Array) -> SearchState:
     pr = prunable_map(params0)
+    # jnp.array (copy semantics), NOT astype: same-dtype astype aliases the
+    # input buffer, and the search donates its state buffers into the jitted
+    # scan - donating an alias of W0 would invalidate the pretrained params.
     return SearchState(
-        W=jax.tree.map(lambda x: x.astype(jnp.float32), params0),
+        W=jax.tree.map(lambda x: jnp.array(x, jnp.float32), params0),
         Gamma=_zeros_like_prunable(params0, pr),
         V=_zeros_like_prunable(params0, pr),
         step=jnp.zeros((), jnp.int32),
@@ -68,23 +72,55 @@ def _align_value_and_grad(pcfg: PruneConfig, W, Gamma, stats, prunable, key):
         S = metrics_mod.metric_tree(pcfg.local_metric, Wp, stats, prunable,
                                     key=key, stoch_frac=pcfg.stoch_frac,
                                     norm=pcfg.score_norm)
-        tot = jnp.zeros((), jnp.float32)
-        for g, s in zip(jax.tree.leaves(Gamma, is_leaf=lambda x: x is None),
-                        jax.tree.leaves(S, is_leaf=lambda x: x is None)):
-            if g is None or s is None:
-                continue
-            tot += jnp.sum(jnp.square(g - s))
-        return 0.5 * pcfg.rho * tot
+        acc = [jnp.zeros((), jnp.float32)]
+
+        def leaf(g, s):  # tree.map: structural alignment enforced
+            if g is not None and s is not None:
+                acc[0] = acc[0] + jnp.sum(jnp.square(g - s))
+
+        jax.tree.map(leaf, Gamma, S, is_leaf=lambda x: x is None)
+        return 0.5 * pcfg.rho * acc[0]
 
     return jax.value_and_grad(val)(W)
+
+
+def _task_value_and_grad(pcfg: PruneConfig, loss_fn: Callable, W: PyTree,
+                         batch: dict):
+    """(loss, metrics), grad - optionally accumulated over microbatches.
+
+    grad_accum > 1 splits the batch dim into microbatch slices and runs the
+    backward once per slice under lax.scan, so peak activation memory is
+    that of one microbatch while the averaged gradient matches the full
+    batch (token weights permitting).
+    """
+    accum = max(1, int(pcfg.grad_accum))
+    if accum == 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(W, batch)
+
+    def split(x):
+        assert x.shape[0] % accum == 0, (
+            f"grad_accum={accum} must divide the calibration batch dim "
+            f"{x.shape[0]}")
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    one = lambda b: jax.value_and_grad(loss_fn, has_aux=True)(W, b)
+    shapes = jax.eval_shape(one, jax.tree.map(lambda x: x[0], micro))
+    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def body(carry, b):
+        return jax.tree.map(jnp.add, carry, one(b)), None
+
+    summed, _ = jax.lax.scan(body, zero, micro)
+    return jax.tree.map(lambda x: x / accum, summed)
 
 
 def search_step(pcfg: PruneConfig, loss_fn: Callable, state: SearchState,
                 batch: dict, stats: PyTree, prunable: PyTree):
     """One mirror-descent iteration. loss_fn(W, batch) -> (loss, metrics)."""
     key = jax.random.fold_in(state.rng, state.step)
-    (loss, loss_metrics), g_task = jax.value_and_grad(
-        loss_fn, has_aux=True)(state.W, batch)
+    (loss, loss_metrics), g_task = _task_value_and_grad(
+        pcfg, loss_fn, state.W, batch)
     align, g_align = _align_value_and_grad(
         pcfg, state.W, state.Gamma, stats, prunable, key)
 
@@ -141,20 +177,29 @@ def no_mirror_step(pcfg: PruneConfig, loss_fn: Callable, W: PyTree,
         loss, aux = loss_fn(Wp, batch)
         S = metrics_mod.metric_tree(pcfg.local_metric, Wp, stats, prunable,
                                     key=key, stoch_frac=pcfg.stoch_frac)
-        reg = jnp.zeros((), jnp.float32)
-        wreg = jnp.zeros((), jnp.float32)
-        for s, (w, p) in zip(
-                jax.tree.leaves(S, is_leaf=lambda x: x is None),
-                zip(jax.tree.leaves(Wp), jax.tree.leaves(prunable))):
-            if s is None or not p:
-                continue
-            reg += jnp.sum(jnp.square(s))
-            wreg += jnp.sum(jnp.square(w))
-        return loss + 0.5 * pcfg.rho * reg + l2 * wreg, aux
+        # tree.map (not zipped leaf lists): the S/W/prunable trees must
+        # agree structurally, and a mismatch raises instead of silently
+        # regularizing the wrong leaves.
+        acc = [jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)]
+
+        def leaf(s, w, p):
+            if s is not None and p:
+                acc[0] = acc[0] + jnp.sum(jnp.square(s))
+                acc[1] = acc[1] + jnp.sum(jnp.square(w))
+
+        jax.tree.map(leaf, S, Wp, prunable, is_leaf=lambda x: x is None)
+        return loss + 0.5 * pcfg.rho * acc[0] + l2 * acc[1], aux
 
     (loss, _), g = jax.value_and_grad(total, has_aux=True)(W)
     W = jax.tree.map(lambda w, gg: w - pcfg.kappa * pcfg.lr * gg, W, g)
     return W, loss
+
+
+@jax.jit
+def _absmax_fused(leaves: tuple) -> jax.Array:
+    """max_i ||leaf_i||_inf in one compiled dispatch (no host pulls)."""
+    return functools.reduce(
+        jnp.maximum, [jnp.max(jnp.abs(x)) for x in leaves])
 
 
 def export_masks(pcfg: PruneConfig, Gamma: PyTree, sparsity: float,
@@ -163,18 +208,25 @@ def export_masks(pcfg: PruneConfig, Gamma: PyTree, sparsity: float,
 
     Soft-thresholded-to-zero entries are tied at |Gamma|=0; the dual V
     retains their sub-threshold saliency, so it breaks ties at an epsilon
-    scale that cannot reorder any nonzero Gamma entries.
+    scale that cannot reorder any nonzero Gamma entries.  The epsilon is
+    computed DEVICE-side: gmax/vmax come out of one fused jitted reduction
+    over all leaves, so a bank re-thresholding at many budgets never pays a
+    per-leaf host sync for the tie-break.
     """
     scores = Gamma
     if V is not None:
-        gmax = max((float(jnp.max(jnp.abs(g))) for g in
-                    jax.tree.leaves(Gamma, is_leaf=lambda x: x is None)
-                    if g is not None), default=0.0)
-        vmax = max((float(jnp.max(jnp.abs(v))) for v in
-                    jax.tree.leaves(V, is_leaf=lambda x: x is None)
-                    if v is not None), default=1.0)
-        eps = 1e-6 * max(gmax, 1e-30) / max(vmax, 1e-30) if gmax > 0 \
-            else 1.0 / max(vmax, 1e-30)
+        gl = tuple(g for g in
+                   jax.tree.leaves(Gamma, is_leaf=lambda x: x is None)
+                   if g is not None)
+        vl = tuple(v for v in
+                   jax.tree.leaves(V, is_leaf=lambda x: x is None)
+                   if v is not None)
+        gmax = _absmax_fused(gl) if gl else jnp.float32(0.0)
+        vmax = _absmax_fused(vl) if vl else jnp.float32(1.0)
+        vsafe = jnp.maximum(vmax, 1e-30)
+        eps = jnp.where(gmax > 0,
+                        1e-6 * jnp.maximum(gmax, 1e-30) / vsafe,
+                        1.0 / vsafe)
         scores = jax.tree.map(
             lambda g, v: None if g is None else jnp.abs(g) + eps * jnp.abs(v),
             Gamma, V, is_leaf=lambda x: x is None)

@@ -11,8 +11,10 @@ unrolled pass, so leaf ``id()`` alone cannot name them.  The model registers
 each sliced layer tree under a (path, layer_index) tag; stats for stacked
 leaves are re-stacked along the layer axis at resolve time.
 
-At production scale the same statistics come out of a jitted per-layer pass;
-the tape is the reference implementation (stats are identical either way).
+At production scale the same statistics come out of the jitted per-layer
+pass (:class:`JitTape` + ``models.model.stats_sumsq``, driven by
+``core.calibrate.collect_stats(impl="jit")``); the eager tape is the parity
+oracle, asserted against the jitted pass in tests.
 """
 from __future__ import annotations
 
@@ -74,6 +76,44 @@ class StatsTape:
             self.sumsq[key] = self.sumsq[key] + ss
         else:
             self.sumsq[key] = ss
+
+
+class JitTape(StatsTape):
+    """Trace-compatible tape: accumulates *traced* fp32 sum-of-squares.
+
+    Installed (via ``recording``) inside a function being jit-traced, it
+    records through the exact same ``dense``/``moe_apply`` hooks as the
+    eager tape, but keeps the per-kernel statistics as jax values so the
+    enclosing function can RETURN them (``stats()``) - under ``lax.scan``
+    the per-layer stats come back stacked along the scan axis for free.
+
+    Registration happens during tracing, so ``id(kernel)`` keys refer to
+    tracers; a jit cache hit replays the recorded program without re-running
+    the Python side effects, which is exactly why the stats must flow out as
+    function outputs rather than host-side state.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.out: dict[tuple[str, int], jax.Array] = {}
+
+    def record(self, kernel, x, *, count=None, ref_count=None) -> None:
+        key = self.registry.get(id(kernel))
+        if key is None:
+            return
+        nlead = kernel.ndim - 2
+        axes = tuple(range(nlead, x.ndim - 1))
+        ss = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes)
+        if count is not None:
+            c = jnp.asarray(count, jnp.float32)
+            scale = jnp.asarray(ref_count, jnp.float32) / jnp.maximum(c, 1.0)
+            ss = ss * scale.reshape(scale.shape + (1,) * (ss.ndim - c.ndim))
+        prev = self.out.get(key)
+        self.out[key] = ss if prev is None else prev + ss
+
+    def stats(self, layer_idx: int) -> dict[str, jax.Array]:
+        """{pathstr: sumsq} for keys registered under ``layer_idx``."""
+        return {p: v for (p, li), v in self.out.items() if li == layer_idx}
 
 
 def current_tape() -> StatsTape | None:

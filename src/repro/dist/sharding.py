@@ -95,6 +95,52 @@ def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
                         is_leaf=lambda x: x is None)
 
 
+def search_state_sharding(axes_tree: PyTree, state, rules: ShardingRules):
+    """NamedSharding tree for a ``core.mirror.SearchState`` on the mesh.
+
+    The trainable copy W inherits the dense parameter rules verbatim (it IS
+    the params tree in fp32); Gamma and V are prunable-leaf shadows of W, so
+    each non-None leaf reuses its kernel's sharding - the three full-size
+    fp32 trees of the mirror-descent search live distributed instead of
+    replicated.  step/rng replicate.  The result pairs leaf-for-leaf with
+    the state for ``jax.device_put`` / jit in_shardings.
+    """
+    from repro.core.mirror import SearchState
+    base = params_sharding(axes_tree, state.W, rules)
+    rep = NamedSharding(rules.mesh, P())
+
+    def gv(g, sh):
+        return None if g is None else sh
+
+    return SearchState(
+        W=base,
+        Gamma=jax.tree.map(gv, state.Gamma, base,
+                           is_leaf=lambda x: x is None),
+        V=jax.tree.map(gv, state.V, base, is_leaf=lambda x: x is None),
+        step=rep, rng=rep)
+
+
+def stacked_batch_sharding(stacked_tree: PyTree, mesh) -> PyTree:
+    """Scan-stacked calibration chunks, leaves (steps, B, ...): the scan
+    axis stays unsharded (consumed sequentially), the batch dim shards over
+    the data axes when divisible - the chunked search streams each step's
+    microbatch already distributed."""
+    data = _one(_data_axes(mesh))
+    dp = 1
+    for a in _data_axes(mesh):
+        dp *= mesh.shape[a]
+
+    def leaf(s):
+        if s is None:
+            return NamedSharding(mesh, P())
+        spec: list = [None] * len(s.shape)
+        if len(s.shape) >= 2 and s.shape[1] % dp == 0:
+            spec[1] = data
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(leaf, stacked_tree, is_leaf=lambda x: x is None)
+
+
 def batch_sharding_tree(batch_tree: PyTree, mesh) -> PyTree:
     """Input batches: leading batch dim over the data axes, rest replicated."""
     data = _one(_data_axes(mesh))

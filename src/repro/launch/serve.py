@@ -4,8 +4,9 @@ Demonstrates the serving path end-to-end on host devices, exercising the
 same prefill/decode step functions the dry-run lowers for the production
 mesh.  Sparse serving has two modes:
 
-* ``--sparse [--save-artifact DIR]`` - calibrate UniPruning inline (2:4),
-  optionally persisting the post-calibration state as a mask-bank artifact;
+* ``--sparse [--save-artifact DIR]`` - run ``launch.calibrate`` (2:4) and
+  serve from the resulting mask-bank artifact (written to --save-artifact,
+  or a temp dir);
 * ``--sparse-artifact DIR [--sparsity S]`` - skip calibration entirely:
   load the bank, re-threshold to masks in one shot, and serve with
   2:4-compressed weights executing through ``kernels.nm_spmm.nm_matmul``
@@ -39,22 +40,35 @@ from repro.models import model as M
 
 
 def _calibrate_sparse(cfg, args, params):
-    """Inline 2:4 UniPruning; optionally persist the bank artifact."""
-    from repro.core import calibrate, mirror
+    """2:4 UniPruning through the ``launch.calibrate`` entry point: the
+    calibration always lands as a MaskBank artifact (a temp dir unless
+    ``--save-artifact`` pins it) and serving re-thresholds from the bank -
+    no inline stats/search in the serving driver."""
+    import tempfile
+
     from repro.core import masks as masks_mod
-    calib = batches_for(cfg, n=8, batch=4, seq=args.prompt_len,
-                        split="calib")
-    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=30)
-    stats = calibrate.collect_stats(cfg, params, calib[:4])
-    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
+    from repro.launch import calibrate as launch_cal
+    tmp = None
     if args.save_artifact:
-        from repro.sparse.bank import MaskBank
-        MaskBank.save(args.save_artifact, arch=args.arch, smoke=args.smoke,
-                      state=state, stats=stats, pcfg=pcfg)
-        print(f"saved mask bank -> {args.save_artifact}")
-    masks = mirror.export_masks(pcfg, state.Gamma, 0.5, V=state.V)
-    print("serving 2:4-pruned weights (masked-dense, inline calibration)")
-    return masks_mod.apply_masks(params, masks)
+        out = args.save_artifact
+    else:  # transient artifact: removed once the masks are extracted
+        tmp = tempfile.TemporaryDirectory(prefix="mask-bank-")
+        out = tmp.name + "/bank"
+    try:
+        calib = batches_for(cfg, n=8, batch=4, seq=args.prompt_len,
+                            split="calib")
+        pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=30)
+        bank = launch_cal.calibrate_to_bank(
+            out, cfg=cfg, pcfg=pcfg, params=params, calib=calib,
+            arch=args.arch, smoke=args.smoke)
+        if args.save_artifact:
+            print(f"saved mask bank -> {out}")
+        print("serving 2:4-pruned weights (masked-dense, bank-backed "
+              "calibration)")
+        return masks_mod.apply_masks(params, bank.masks_at())
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
 
 
 def _load_sparse(args, params):

@@ -110,7 +110,7 @@ def _embed_inputs(cfg: ModelConfig, params: PyTree, batch: dict) -> jax.Array:
 
 
 def _run_encoder(cfg: ModelConfig, params: PyTree, frames: jax.Array, *,
-                 unroll: bool = False):
+                 unroll: bool = False, stats: dict | None = None):
     x = cm.dense(params["frame_proj"], frames.astype(cm.COMPUTE_DTYPE))
     pe = cm.sinusoidal_positions(x.shape[1], cfg.d_model)
     x = x + jnp.asarray(pe, x.dtype)
@@ -119,9 +119,14 @@ def _run_encoder(cfg: ModelConfig, params: PyTree, frames: jax.Array, *,
     for s, (spec, sp) in enumerate(zip(
             make_stages(cfg, cfg.encoder_layers, ("enc",)),
             params["enc_stages"])):
-        x, _, _ = _stage_apply_full(
-            cfg, spec, sp, x, ctx, None, remat=False,
-            unroll=f"['enc_stages'][{s}]" if unroll else False)
+        if stats is not None:
+            x, layer_ss, _ = _stage_stats(cfg, spec, sp, x, ctx, None)
+            for path, arr in layer_ss.items():
+                stats[f"['enc_stages'][{s}]" + path] = arr
+        else:
+            x, _, _ = _stage_apply_full(
+                cfg, spec, sp, x, ctx, None, remat=False,
+                unroll=f"['enc_stages'][{s}]" if unroll else False)
     return blk._norm(cfg, params["enc_norm"], x)
 
 
@@ -155,6 +160,77 @@ def _stage_apply_full(cfg, spec, stage_params, x, ctx: Ctx, shared,
     f = jax.checkpoint(body) if remat else body
     x, (auxs, caches) = jax.lax.scan(f, x, stage_params)
     return x, jnp.sum(auxs), caches
+
+
+def _stage_stats(cfg, spec, stage_params, x, ctx: Ctx, shared):
+    """One scanned stage of the jitted stats pass.
+
+    The ``lax.scan`` body installs a trace-compatible :class:`~repro.core.
+    tape.JitTape` over the sliced layer tree (plus the shared block, if any)
+    and returns the per-kernel input sum-of-squares as scan OUTPUTS, so the
+    stacked result already carries the leading layer axis the stats tree
+    needs - the whole stage lowers to one scan regardless of depth, exactly
+    like the forward pass, and shards under installed rules via the same
+    ``constrain`` calls the blocks already make.
+
+    Returns (x, {relpath: (repeats, ...) sumsq}, {shared_relpath: ...}).
+    """
+    from repro.core import tape as _tape
+    pattern, repeats = spec
+
+    def body(h, layer_p):
+        t = _tape.JitTape()
+        t.register_layer(layer_p, "", 0)
+        if shared is not None:
+            t.register_layer(shared, "", -1)
+        with _tape.recording(t):
+            h = constrain(h, "batch", "act_seq", None)
+            for j, kind in enumerate(pattern):
+                h, _, _ = blk.block_apply_full(kind, cfg, layer_p[str(j)], h,
+                                               ctx, shared=shared)
+        return h, (t.stats(0), t.stats(-1))
+
+    x, (layer_ss, shared_ss) = jax.lax.scan(body, x, stage_params)
+    return x, layer_ss, shared_ss
+
+
+def stats_sumsq(cfg: ModelConfig, params: PyTree, batch: dict) -> PyTree:
+    """Jit-compatible stats pass: one calibration batch -> per-input-feature
+    activation sum-of-squares, as a pytree matching ``params``.
+
+    The production-scale sibling of the eager tape pass: stage-compressed
+    ``lax.scan`` execution (per-layer stats stacked by the scan), traceable
+    under ``jax.jit``, sharding constraints applied under installed rules.
+    Covers every kernel inside the layer stacks plus the shared block;
+    leaves the pass does not project through (embeddings, heads, routers,
+    frame/vit projections - all non-prunable) come back None.  Accumulate
+    over batches and sqrt to get the tape-identical ||X_j||_2.
+    """
+    by_path: dict[str, jax.Array] = {}
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(cfg, params, batch["frames"], stats=by_path)
+        x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    ctx = Ctx(positions=pos, encoder_out=enc_out)
+    shared = params.get("shared")
+    shared_acc: dict[str, jax.Array] = {}
+    for s, (spec, sp) in enumerate(zip(make_stages(cfg), params["stages"])):
+        x, layer_ss, shared_ss = _stage_stats(cfg, spec, sp, x, ctx, shared)
+        for path, arr in layer_ss.items():
+            by_path[f"['stages'][{s}]" + path] = arr
+        for path, arr in shared_ss.items():  # stacked over layers: reduce
+            arr = jnp.sum(arr, axis=0)
+            prev = shared_acc.get(path)
+            shared_acc[path] = arr if prev is None else prev + arr
+    for path, arr in shared_acc.items():
+        by_path["['shared']" + path] = arr
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [by_path.get(jax.tree_util.keystr(kp)) for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def forward(cfg: ModelConfig, params: PyTree, batch: dict, *,

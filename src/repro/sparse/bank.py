@@ -15,6 +15,7 @@ configuration; here a new budget is a quantile of a saved tensor.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
 from typing import Any, Iterable
 
@@ -92,8 +93,12 @@ class MaskBank:
     @classmethod
     def save(cls, directory, *, arch: str, smoke: bool, state,
              stats: PyTree = None, pcfg: PruneConfig,
-             extra: dict | None = None) -> "MaskBank":
-        """state: core.mirror.SearchState (or any object with Gamma/V)."""
+             extra: dict | None = None, cfg=None) -> "MaskBank":
+        """state: core.mirror.SearchState (or any object with Gamma/V).
+
+        cfg: explicit ModelConfig for archs outside the registry (benchmark
+        families, example models); registry archs resolve from ``arch``.
+        """
         tree = {"Gamma": state.Gamma, "V": state.V, "stats": stats}
         meta = {"schema": SCHEMA, "format_version": FORMAT_VERSION,
                 "arch": arch, "smoke": bool(smoke),
@@ -102,11 +107,11 @@ class MaskBank:
                 "checksum": _tree_checksum(tree),
                 **(extra or {})}
         ckpt.save_artifact(directory, tree, metadata=meta)
-        return cls(_cfg_for(arch, smoke), pcfg, state.Gamma, state.V,
-                   stats, meta)
+        return cls(cfg if cfg is not None else _cfg_for(arch, smoke),
+                   pcfg, state.Gamma, state.V, stats, meta)
 
     @classmethod
-    def load(cls, directory) -> "MaskBank":
+    def load(cls, directory, *, cfg=None) -> "MaskBank":
         probe = {"Gamma": 0}  # metadata first: the template needs the arch
         _, meta = ckpt.load_artifact(directory, probe)
         assert meta.get("schema") == SCHEMA, meta
@@ -116,7 +121,16 @@ class MaskBank:
                 f"mask bank at {directory} has format_version {version}, "
                 f"this build reads <= {FORMAT_VERSION}: refusing a stale "
                 "reader on a newer artifact")
-        cfg = _cfg_for(meta["arch"], meta["smoke"])
+        if version < 2:
+            warnings.warn(
+                f"mask bank at {directory} is a LEGACY format_version=1 "
+                "artifact with no integrity checksum: a truncated or "
+                "bit-rotted leaf would silently re-threshold to wrong "
+                "masks.  Re-save it (launch.calibrate / MaskBank.save) to "
+                "get checksummed format_version=2.",
+                UserWarning, stacklevel=2)
+        if cfg is None:
+            cfg = _cfg_for(meta["arch"], meta["smoke"])
         tpl = _params_template(cfg)
         tree, _ = ckpt.load_artifact(
             directory, {"Gamma": tpl, "V": tpl, "stats": tpl})

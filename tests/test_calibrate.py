@@ -1,0 +1,282 @@
+"""Mesh-scale calibration pipeline: jitted-stats parity vs the tape oracle,
+scanned-vs-eager search equivalence, microbatch gradient accumulation,
+no_mirror_step leaf alignment, device-side export tie-breaking, and the
+launch.calibrate -> MaskBank -> serve artifact handoff."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core import calibrate, masks as masks_mod, metrics as metrics_mod
+from repro.core import mirror
+from repro.core.prunable import prunable_map
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.optim.losses import lm_loss
+
+# scan-stacked: 4 layers of a 1-kind pattern -> (4, ...) stacked leaves
+STACKED = ModelConfig(name="t4", family="dense", d_model=64, num_layers=4,
+                      num_heads=2, num_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=256)
+MOE = ModelConfig(name="m4", family="moe", d_model=64, num_layers=4,
+                  num_heads=2, num_kv_heads=2, head_dim=32, d_ff=128,
+                  moe_d_ff=128, vocab_size=256, pattern=("moe",),
+                  num_experts=4, top_k=2)
+
+_is_none = lambda x: x is None
+
+
+def _stats_pair(cfg, params, batches):
+    jit_stats = calibrate.collect_stats(cfg, params, batches, impl="jit")
+    tape_stats = calibrate.collect_stats(cfg, params, batches, impl="tape")
+    return jit_stats, tape_stats
+
+
+def _assert_parity(cfg, params, jit_stats, tape_stats, *, tol):
+    """The same aggregate criterion the bench gate enforces (see
+    calibrate.stats_parity for why it is Frobenius, not elementwise)."""
+    worst, ok, checked = calibrate.stats_parity(
+        tape_stats, jit_stats, prunable_map(params), tol=tol)
+    assert ok, (worst, tol)
+    assert checked >= 5, checked  # attn + mlp/moe kernels all covered
+
+
+def test_jit_stats_match_tape_scan_stacked():
+    params = M.init_params(STACKED, jax.random.key(0))
+    batches = batches_for(STACKED, n=3, batch=2, seq=32, split="calib")
+    jit_stats, tape_stats = _stats_pair(STACKED, params, batches)
+    # stacked leaves keep their leading layer axis in both impls
+    ks = [s for s in jax.tree.leaves(jit_stats, is_leaf=_is_none)
+          if s is not None]
+    assert any(s.ndim == 2 and s.shape[0] == 4 for s in ks), \
+        [s.shape for s in ks]
+    _assert_parity(STACKED, params, jit_stats, tape_stats, tol=5e-2)
+
+
+def test_jit_stats_match_tape_moe():
+    params = M.init_params(MOE, jax.random.key(1))
+    batches = batches_for(MOE, n=2, batch=2, seq=32, split="calib")
+    jit_stats, tape_stats = _stats_pair(MOE, params, batches)
+    # per-expert stats carry the (layers, E, d_in) shape in both impls
+    shapes = {tuple(s.shape)
+              for s in jax.tree.leaves(jit_stats, is_leaf=_is_none)
+              if s is not None}
+    assert (4, 4, 64) in shapes, shapes
+    _assert_parity(MOE, params, jit_stats, tape_stats, tol=5e-2)
+
+
+def test_stats_batches_policy_lives_in_pruneconfig():
+    params = M.init_params(STACKED, jax.random.key(0))
+    batches = batches_for(STACKED, n=4, batch=2, seq=32, split="calib")
+    pcfg = PruneConfig(stats_batches=2)
+    limited = calibrate.collect_stats(STACKED, params, batches, pcfg=pcfg)
+    manual = calibrate.collect_stats(STACKED, params, batches[:2])
+    for a, b in zip(jax.tree.leaves(limited, is_leaf=_is_none),
+                    jax.tree.leaves(manual, is_leaf=_is_none)):
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+
+def _search_pair(pcfg_a, pcfg_b):
+    params = M.init_params(STACKED, jax.random.key(0))
+    batches = batches_for(STACKED, n=3, batch=4, seq=32, split="calib")
+    stats = calibrate.collect_stats(STACKED, params, batches)
+    sa, ha = calibrate.run_search(STACKED, pcfg_a, params, batches, stats,
+                                 log_every=1)
+    sb, hb = calibrate.run_search(STACKED, pcfg_b, params, batches, stats,
+                                 log_every=1)
+    return sa, ha, sb, hb
+
+
+def test_scanned_search_matches_eager():
+    """lax.scan-chunked steps (with a remainder chunk) == per-step loop."""
+    eager = PruneConfig(local_metric="wanda", steps=5, scan_chunk=0)
+    scanned = dataclasses.replace(eager, scan_chunk=2)  # 2+2+1: remainder
+    sa, ha, sb, hb = _search_pair(eager, scanned)
+    assert int(sa.step) == int(sb.step) == 5
+    assert len(ha) == len(hb) == 5
+    for a, b in zip(jax.tree.leaves(sa.Gamma, is_leaf=_is_none),
+                    jax.tree.leaves(sb.Gamma, is_leaf=_is_none)):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    for ma, mb in zip(ha, hb):
+        assert abs(ma["loss"] - mb["loss"]) < 1e-3 * (1 + abs(ma["loss"]))
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=2 microbatches == one full-batch step (uniform masks)."""
+    full = PruneConfig(local_metric="wanda", steps=3, grad_accum=1)
+    accum = dataclasses.replace(full, grad_accum=2)
+    sa, _, sb, _ = _search_pair(full, accum)
+    for a, b in zip(jax.tree.leaves(sa.W), jax.tree.leaves(sb.W)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_search_with_host_mesh_rules_matches_unsharded():
+    """rules= places W/Gamma/V via dist.sharding and changes no numerics."""
+    from repro.dist.sharding import make_production_rules
+    from repro.launch.mesh import make_host_mesh
+    rules = make_production_rules(make_host_mesh())
+    params = M.init_params(STACKED, jax.random.key(0))
+    batches = batches_for(STACKED, n=2, batch=2, seq=32, split="calib")
+    stats = calibrate.collect_stats(STACKED, params, batches)
+    pcfg = PruneConfig(local_metric="wanda", steps=3)
+    plain, _ = calibrate.run_search(STACKED, pcfg, params, batches, stats)
+    sharded, _ = calibrate.run_search(STACKED, pcfg, params, batches, stats,
+                                      rules=rules)
+    for a, b in zip(jax.tree.leaves(plain.Gamma, is_leaf=_is_none),
+                    jax.tree.leaves(sharded.Gamma, is_leaf=_is_none)):
+        if a is None:
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_search_never_touches_w0_with_donation():
+    """Donated scan buffers must never alias the pretrained params."""
+    params = M.init_params(STACKED, jax.random.key(0))
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), params)
+    batches = batches_for(STACKED, n=2, batch=2, seq=32, split="calib")
+    stats = calibrate.collect_stats(STACKED, params, batches)
+    pcfg = PruneConfig(local_metric="wanda", steps=4, scan_chunk=4)
+    calibrate.run_search(STACKED, pcfg, params, batches, stats)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_no_mirror_step_leaf_alignment_moe():
+    """The Eq. 8 objective must regularize exactly the prunable leaves -
+    verified against a hand-rolled total on a model whose flattened leaf
+    order interleaves prunable kernels with non-prunable ones (router,
+    norms, embeddings)."""
+    params = M.init_params(MOE, jax.random.key(2))
+    batches = batches_for(MOE, n=1, batch=2, seq=32, split="calib")
+    stats = calibrate.collect_stats(MOE, params, batches)
+    prunable = prunable_map(params)
+    pcfg = PruneConfig(local_metric="wanda", rho=1e-3, steps=1)
+    W = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    rng = jax.random.key(7)
+    step = jnp.zeros((), jnp.int32)
+    loss_fn = lambda w, b: lm_loss(MOE, w, b)
+    _, total = mirror.no_mirror_step(pcfg, loss_fn, W, batches[0], stats,
+                                     prunable, rng, step, l2=0.01)
+
+    key = jax.random.fold_in(rng, step)
+    S = metrics_mod.metric_tree(pcfg.local_metric, W, stats, prunable,
+                                key=key, stoch_frac=pcfg.stoch_frac)
+    reg = wreg = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(prunable)
+    for (kp, p), s, w in zip(
+            flat, jax.tree.leaves(S, is_leaf=_is_none),
+            jax.tree.leaves(W)):
+        path = jax.tree_util.keystr(kp)
+        if not p:
+            continue
+        assert s is not None, path
+        assert "router" not in path and "embed" not in path, path
+        reg += float(jnp.sum(jnp.square(s)))
+        wreg += float(jnp.sum(jnp.square(w)))
+    task = float(loss_fn(W, batches[0])[0])
+    expect = task + 0.5 * pcfg.rho * reg + 0.01 * wreg
+    assert abs(float(total) - expect) < 1e-2 * (1 + abs(expect)), \
+        (float(total), expect)
+
+
+def test_no_mirror_step_rejects_misaligned_trees():
+    params = M.init_params(STACKED, jax.random.key(0))
+    batches = batches_for(STACKED, n=1, batch=2, seq=32, split="calib")
+    stats = calibrate.collect_stats(STACKED, params, batches)
+    bad_prunable = {"not": "params-shaped"}
+    W = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+    with pytest.raises((ValueError, KeyError, TypeError)):
+        mirror.no_mirror_step(
+            PruneConfig(steps=1), lambda w, b: lm_loss(STACKED, w, b), W,
+            batches[0], stats, bad_prunable, jax.random.key(0),
+            jnp.zeros((), jnp.int32), l2=0.0)
+
+
+def test_export_masks_device_side_tie_break():
+    """Gamma zeros tie; V must break the tie without host pulls reordering
+    nonzero Gamma entries."""
+    pcfg = PruneConfig(mode="unstructured")
+    Gamma = {"a": jnp.asarray([[0.0, 0.0, 3.0, 2.0]] * 4).T}
+    V = {"a": jnp.asarray([[0.5, 0.9, 0.1, 0.1]] * 4).T}
+    masks = mirror.export_masks(pcfg, Gamma, 0.25, V=V)  # keep 12/16
+    m = np.asarray(masks["a"])
+    # the two nonzero-Gamma rows always win; among the Gamma==0 ties the
+    # higher-|V| row is kept
+    assert m[2].all() and m[3].all()
+    assert m[1].all() and not m[0].any()
+
+
+def test_launch_calibrate_writes_consumable_bank(tmp_path):
+    """The entry point's artifact serves masks + stats with zero re-runs."""
+    from repro.launch import calibrate as launch_cal
+    from repro.sparse.bank import MaskBank
+    arch = "llama3.2-1b"
+    from repro.configs.base import get_smoke_config
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=2, batch=2, seq=32, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2,
+                       stats_batches=2)
+    out = tmp_path / "bank"
+    bank = launch_cal.calibrate_to_bank(out, cfg=cfg, pcfg=pcfg,
+                                        params=params, calib=calib,
+                                        arch=arch, smoke=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # v2 artifact loads silently
+        loaded = MaskBank.load(out)
+    assert loaded.meta["params_fingerprint"] == \
+        launch_cal.params_fingerprint(params)
+    # masks from the loaded artifact == masks from the in-memory bank
+    for a, b in zip(
+            jax.tree.leaves(bank.masks_at(), is_leaf=_is_none),
+            jax.tree.leaves(loaded.masks_at(), is_leaf=_is_none)):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # persisted stats drive baselines without a stats pass
+    wanda = calibrate.baseline_masks("wanda", params, loaded.stats, 0.5)
+    sp = masks_mod.sparsity_of(wanda)
+    assert 0.3 < sp < 0.7, sp
+    # ensure_bank: matching pcfg+weights -> pure load (bit-identical Gamma)
+    again = launch_cal.ensure_bank(out, cfg=cfg, pcfg=pcfg, params=params,
+                                   calib=calib, arch=arch, smoke=True)
+    assert again.meta.get("checksum") == bank.meta.get("checksum")
+
+
+def test_bank_legacy_v1_load_warns(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+    from repro.sparse.bank import SCHEMA, MaskBank
+    from repro.configs.base import get_smoke_config
+    arch = "llama3.2-1b"
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=1, batch=2, seq=32, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=1,
+                       stats_batches=1)
+    stats = calibrate.collect_stats(cfg, params, calib, pcfg=pcfg)
+    state, _ = calibrate.run_search(cfg, pcfg, params, calib, stats)
+    # a legacy writer: schema v1 metadata, no format_version / checksum
+    legacy = tmp_path / "v1bank"
+    ckpt.save_artifact(legacy,
+                       {"Gamma": state.Gamma, "V": state.V, "stats": stats},
+                       metadata={"schema": SCHEMA, "arch": arch,
+                                 "smoke": True,
+                                 "pcfg": dataclasses.asdict(pcfg)})
+    with pytest.warns(UserWarning, match="format_version=1"):
+        bank = MaskBank.load(legacy)
+    assert bank.meta.get("format_version", 1) == 1
+    assert bank.masks_at() is not None  # still serves, just loudly
