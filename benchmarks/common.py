@@ -120,3 +120,16 @@ def evaluate(cfg: ModelConfig, params, *, n_batches: int = 3) -> dict:
 def fmt_row(cols, widths=None):
     widths = widths or [14] * len(cols)
     return "  ".join(str(c)[:w].ljust(w) for c, w in zip(cols, widths))
+
+
+def attach_obs_summary(result: dict) -> dict:
+    """Merge the live flight-recorder snapshot into a BENCH_* result dict.
+
+    No-op (and no key) while the recorder is disabled, so artifacts from
+    uninstrumented runs are byte-identical to pre-obs ones.  Called by
+    ``table8_inference.write_serve_json`` on every BENCH_*.json it writes.
+    """
+    from repro import obs
+    if obs.enabled():
+        result["obs"] = obs.summary()
+    return result

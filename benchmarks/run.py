@@ -16,7 +16,11 @@ and the same token parities; the fleet bench must produce
 token-identical to a plain dense engine; the calibrate bench must produce
 ``results/bench/BENCH_calibrate.json`` with the jitted sharded stats pass
 matching the eager tape oracle (parity flag) and live scanned-vs-eager
-search steps/s - and exits non-zero otherwise.
+search steps/s; the obs bench must produce
+``results/bench/BENCH_obs.json`` with flight-recorder decode overhead
+<= 3%, identical jitted dispatch counts with telemetry on and off,
+per-budget fleet decode p50/p95, and per-chunk search series in the JSONL
+trace under results/bench/obs_trace - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
@@ -94,13 +98,33 @@ def smoke() -> None:
     assert cal["stats_parity_leaves"] > 0, "stats parity checked no leaves"
     assert cal["search_steps_s_scanned"] > 0 and \
         cal["search_steps_s_eager"] > 0, cal
+    from benchmarks import bench_obs
+
+    ob = bench_obs.obs_bench(rows)
+    ob_path = table8_inference.write_serve_json(ob, name="BENCH_obs.json")
+    assert ob_path.exists(), ob_path
+    assert ob["overhead_pct"] <= 3.0, (
+        f"flight-recorder decode overhead {ob['overhead_pct']:.2f}% "
+        "exceeds the 3% budget")
+    assert ob["dispatch_counts_identical"], (
+        f"telemetry changed the jitted dispatch count: "
+        f"{ob['dispatches_per_run']}")
+    for name, p in ob["fleet_decode_ms"].items():
+        assert p["p50"] is not None and p["p95"] is not None, (
+            f"fleet budget {name} missing decode p50/p95 with the "
+            "recorder enabled")
+    assert ob["trace_search_chunks"] >= 1 and ob["trace_series_ok"], (
+        "run_search emitted no per-chunk loss/sparsity/mask-churn series "
+        "into the JSONL trace")
+    assert ob["trace_span_events"] >= 1, "no span events in the trace"
 
     print(f"smoke ok: wrote {path} (ratio {ratio:.4f}), {moe_path} "
           f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
           f"kernel-native), {fleet_path} "
-          f"({len(fleet['budgets'])} budgets from one bank) and {cal_path} "
+          f"({len(fleet['budgets'])} budgets from one bank), {cal_path} "
           f"(scanned search {cal['scanned_vs_eager']:.2f}x eager, stats "
-          "parity ok)")
+          f"parity ok) and {ob_path} ({ob['overhead_pct']:.2f}% telemetry "
+          "overhead)")
 
 
 def main() -> None:
@@ -110,7 +134,7 @@ def main() -> None:
     if ap.parse_args().smoke:
         smoke()
         return
-    from benchmarks import (bench_calibrate, bench_fleet,
+    from benchmarks import (bench_calibrate, bench_fleet, bench_obs,
                             fig2_high_sparsity, oneshot_export,
                             table1_unstructured, table2_semistructured,
                             table4_local_metric, table5_mirror_ablation,
@@ -121,7 +145,7 @@ def main() -> None:
     for mod in [table1_unstructured, table2_semistructured,
                 table4_local_metric, table5_mirror_ablation,
                 fig2_high_sparsity, table8_inference, bench_fleet,
-                bench_calibrate, oneshot_export]:
+                bench_calibrate, bench_obs, oneshot_export]:
         name = mod.__name__.split(".")[-1]
         t0 = time.time()
         mod.run(rows)
@@ -145,6 +169,10 @@ def main() -> None:
     if cal_rows:
         table8_inference.write_serve_json(cal_rows[0],
                                           name="BENCH_calibrate.json")
+    obs_rows = [r for r in rows if r.get("table") == "obs"]
+    if obs_rows:
+        table8_inference.write_serve_json(obs_rows[0],
+                                          name="BENCH_obs.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

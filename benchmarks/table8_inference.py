@@ -280,11 +280,12 @@ def serve_bench_moe(out_rows: list, *, arch: str = "mixtral-8x22b",
 
 def write_serve_json(result: dict, path=None, *,
                      name: str = "BENCH_serve.json") -> pathlib.Path:
+    from benchmarks.common import attach_obs_summary
     out = (pathlib.Path(path) if path else
            pathlib.Path(__file__).resolve().parent.parent / "results" /
            "bench" / name)
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(result, indent=1))
+    out.write_text(json.dumps(attach_obs_summary(result), indent=1))
     return out
 
 

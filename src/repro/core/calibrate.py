@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import masks as masks_mod
 from repro.core import metrics as metrics_mod
@@ -159,14 +160,39 @@ def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
     chunk = pcfg.scan_chunk if scan_chunk is None else scan_chunk
     chunk = max(int(chunk), 0)
     history: list[dict] = []
+    # series keys the flight recorder traces per chunk (convergence is the
+    # paper's whole argument for global feedback - the trajectory must be
+    # observable without re-running the search)
+    _TRACE = ("loss", "align", "mask_churn", "gamma_entropy")
 
     def record(metrics_stack, start, length):
-        if not log_every:
+        """Fold one chunk's stacked metrics into history + the trace.
+
+        Called with per-step metric arrays of shape (length,) - both the
+        scanned path (real lax.scan outputs) and the eager path (a stack of
+        one) land here, so logging and tracing behave identically.  Pulls
+        to host exactly once per chunk, and only when someone is listening.
+        """
+        emit = obs.enabled()
+        if not log_every and not emit:
             return
         host = {k: np.asarray(v) for k, v in metrics_stack.items()}
-        for j in range(length):
-            if (start + j) % log_every == 0:
-                history.append({k: float(v[j]) for k, v in host.items()})
+        if emit:
+            sparsity = [float(1.0 - v) for v in host["gamma_nonzero_frac"]]
+            obs.log("calibrate.search_chunk", start=start, steps=length,
+                    sparsity=sparsity,
+                    **{k: [float(x) for x in host[k]] for k in _TRACE
+                       if k in host})
+            obs.inc("calibrate.search_steps", length)
+            obs.set_gauge("calibrate.gamma_entropy",
+                          float(host["gamma_entropy"][-1]))
+            obs.set_gauge("calibrate.mask_churn",
+                          float(host["mask_churn"][-1]))
+            obs.set_gauge("calibrate.sparsity", sparsity[-1])
+        if log_every:
+            for j in range(length):
+                if (start + j) % log_every == 0:
+                    history.append({k: float(v[j]) for k, v in host.items()})
 
     if chunk <= 1:  # eager: one jitted dispatch per step
         step_fn = jax.jit(
@@ -174,9 +200,11 @@ def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
                                              prunable),
             donate_argnums=0)
         for n in range(pcfg.steps):
-            state, m = step_fn(state, batches[n % len(batches)])
-            if log_every and n % log_every == 0:
-                history.append({k: float(v) for k, v in m.items()})
+            sp = obs.span("calibrate.search_step", step=n)
+            with sp:
+                state, m = step_fn(state, batches[n % len(batches)])
+                sp.fence(m)
+            record({k: jnp.asarray(v)[None] for k, v in m.items()}, n, 1)
         return state, history
 
     def chunk_fn(st, stacked):
@@ -195,7 +223,13 @@ def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
             stacked = jax.device_put(
                 stacked,
                 sharding_mod.stacked_batch_sharding(stacked, rules.mesh))
-        state, ms = chunk_jit(state, stacked)
+        # fencing on the chunk's metric stack charges device time to the
+        # chunk span; with the recorder off there is no fence and dispatch
+        # stays fully async (record() then pulls nothing either)
+        sp = obs.span("calibrate.search_chunk", start=n, steps=c)
+        with sp:
+            state, ms = chunk_jit(state, stacked)
+            sp.fence(ms)
         record(ms, n, c)
         n += c
     return state, history

@@ -151,17 +151,42 @@ def search_step(pcfg: PruneConfig, loss_fn: Callable, state: SearchState,
         lambda v: None if v is None else prox_mod.soft_threshold(v, pcfg.lam),
         V, is_leaf=lambda x: x is None)
 
+    # convergence observables, all device-side scalars: they ride out of the
+    # jitted lax.scan as stacked outputs (no host callbacks mid-search).
+    #   nz      - Gamma support size (1 - nz/tot = live sparsity trajectory)
+    #   flips   - support entries that changed old->new Gamma this step;
+    #             flips/tot is the mask-churn rate the trace records
+    #   absum/abslogsum - accumulators for the Gamma-simplex entropy
+    #             H(|Gamma|/Z) = log Z - (1/Z) sum |g| log |g|, normalized
+    #             by log(tot) to [0, 1] (1 = uniform saliency, 0 = a single
+    #             spike; collapse shows up as a dive long before masks stop
+    #             moving)
     nz = jnp.zeros((), jnp.float32)
+    flips = jnp.zeros((), jnp.float32)
+    absum = jnp.zeros((), jnp.float32)
+    abslogsum = jnp.zeros((), jnp.float32)
     tot = 0
-    for g in jax.tree.leaves(Gamma, is_leaf=lambda x: x is None):
+    for g_old, g in zip(
+            jax.tree.leaves(state.Gamma, is_leaf=lambda x: x is None),
+            jax.tree.leaves(Gamma, is_leaf=lambda x: x is None)):
         if g is None:
             continue
         nz += jnp.sum(g != 0)
+        flips += jnp.sum((g_old != 0) != (g != 0))
+        a = jnp.abs(g)
+        absum += jnp.sum(a)
+        abslogsum += jnp.sum(jnp.where(a > 0, a * jnp.log(
+            jnp.where(a > 0, a, 1.0)), 0.0))
         tot += g.size
+    z = jnp.maximum(absum, 1e-30)
+    entropy = jnp.where(absum > 0, jnp.log(z) - abslogsum / z, 0.0)
+    entropy = entropy / jnp.log(jnp.float32(max(tot, 2)))
     new_state = SearchState(W=W, Gamma=Gamma, V=V, step=state.step + 1,
                             rng=state.rng)
     metrics = {"loss": loss, "align": align,
-               "gamma_nonzero_frac": nz / max(tot, 1), **loss_metrics}
+               "gamma_nonzero_frac": nz / max(tot, 1),
+               "mask_churn": flips / max(tot, 1),
+               "gamma_entropy": entropy, **loss_metrics}
     return new_state, metrics
 
 

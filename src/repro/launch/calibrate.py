@@ -20,15 +20,25 @@ steps with donated, ``dist.sharding``-placed state (pass ``--mesh`` /
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
-import time
 from typing import Any
 
 import jax
 
+from repro import obs
 from repro.configs.base import PruneConfig, get_config, get_smoke_config
 
 PyTree = Any
+
+
+def _stage_annotation(name: str, step: int, annotate: bool):
+    """jax.profiler.StepTraceAnnotation when --xprof-dir is live, else a
+    nullcontext - the annotations only mean something inside an active
+    profiler trace."""
+    if not annotate:
+        return contextlib.nullcontext()
+    return jax.profiler.StepTraceAnnotation(name, step_num=step)
 
 
 def params_fingerprint(params: PyTree) -> str:
@@ -41,29 +51,48 @@ def calibrate_to_bank(out_dir, *, cfg, pcfg: PruneConfig, params: PyTree,
                       calib: list[dict], arch: str, smoke: bool,
                       rules=None, stats_impl: str = "jit",
                       log_every: int = 0, loss_fn=None,
-                      extra: dict | None = None):
+                      extra: dict | None = None, xprof: bool = False):
     """Run the full calibration once and persist the MaskBank artifact.
 
     Returns the in-memory :class:`~repro.sparse.bank.MaskBank` backed by the
     artifact just written to ``out_dir``.
+
+    Stage timings go through ``obs.timer``: monotonic ``perf_counter``
+    clocks with ``jax.block_until_ready`` fencing on each stage's outputs,
+    so the seconds recorded in the bank's meta measure the device work the
+    stage dispatched, not just the python that launched it (a bare
+    ``time.time()`` around async-dispatched jax under-reports and bills
+    the tail to the next stage).  ``xprof=True`` wraps each stage in a
+    ``jax.profiler.StepTraceAnnotation`` for an active profiler trace.
     """
     from repro.core import calibrate
     from repro.sparse.bank import MaskBank
-    t0 = time.time()
-    stats = calibrate.collect_stats(cfg, params, calib, pcfg=pcfg,
-                                    impl=stats_impl, rules=rules)
-    t_stats = time.time() - t0
-    t0 = time.time()
-    state, history = calibrate.run_search(cfg, pcfg, params, calib, stats,
-                                          rules=rules, log_every=log_every,
-                                          loss_fn=loss_fn)
-    t_search = time.time() - t0
+    with _stage_annotation("calibrate.stats", 0, xprof), \
+            obs.timer("calibrate.stats", arch=arch,
+                      stats_impl=stats_impl) as t_stats:
+        stats = calibrate.collect_stats(cfg, params, calib, pcfg=pcfg,
+                                        impl=stats_impl, rules=rules)
+        t_stats.fence(stats)
+    with _stage_annotation("calibrate.search", 1, xprof), \
+            obs.timer("calibrate.search", arch=arch,
+                      steps=pcfg.steps) as t_search:
+        state, history = calibrate.run_search(cfg, pcfg, params, calib,
+                                              stats, rules=rules,
+                                              log_every=log_every,
+                                              loss_fn=loss_fn)
+        t_search.fence(state)
     meta = {"params_fingerprint": params_fingerprint(params),
             "stats_impl": stats_impl,
-            "stats_seconds": t_stats, "search_seconds": t_search,
+            "stats_seconds": t_stats.seconds,
+            "search_seconds": t_search.seconds,
             "history": history, **(extra or {})}
-    return MaskBank.save(out_dir, arch=arch, smoke=smoke, state=state,
-                         stats=stats, pcfg=pcfg, cfg=cfg, extra=meta)
+    with obs.timer("calibrate.save_bank", arch=arch) as t_save:
+        bank = MaskBank.save(out_dir, arch=arch, smoke=smoke, state=state,
+                             stats=stats, pcfg=pcfg, cfg=cfg, extra=meta)
+    obs.log("calibrate.done", arch=arch, out_dir=str(out_dir),
+            stats_seconds=t_stats.seconds, search_seconds=t_search.seconds,
+            save_seconds=t_save.seconds)
+    return bank
 
 
 def ensure_bank(out_dir, *, cfg, pcfg: PruneConfig, params: PyTree,
@@ -109,7 +138,17 @@ def main(argv=None) -> None:
     ap.add_argument("--mesh", default=None, choices=[None, "host"],
                     help="'host': shard stats + search state over the "
                          "local host mesh via dist.sharding rules")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable the flight recorder and write the JSONL "
+                         "event trace (spans, per-chunk search series) + "
+                         "a metrics.prom snapshot here")
+    ap.add_argument("--xprof-dir", default=None,
+                    help="capture a jax profiler trace here, with "
+                         "StepTraceAnnotation marks per pipeline stage")
     args = ap.parse_args(argv)
+
+    if args.trace_dir:
+        obs.configure(trace_dir=args.trace_dir)
 
     from repro.data.synthetic import batches_for
     from repro.models import model as M
@@ -127,10 +166,19 @@ def main(argv=None) -> None:
         from repro.launch.mesh import make_host_mesh
         rules = make_production_rules(make_host_mesh())
 
-    bank = calibrate_to_bank(args.out, cfg=cfg, pcfg=pcfg, params=params,
-                             calib=calib, arch=args.arch, smoke=args.smoke,
-                             rules=rules, stats_impl=args.stats_impl,
-                             log_every=args.log_every)
+    if args.xprof_dir:
+        jax.profiler.start_trace(args.xprof_dir)
+    try:
+        bank = calibrate_to_bank(args.out, cfg=cfg, pcfg=pcfg,
+                                 params=params, calib=calib, arch=args.arch,
+                                 smoke=args.smoke, rules=rules,
+                                 stats_impl=args.stats_impl,
+                                 log_every=args.log_every,
+                                 xprof=bool(args.xprof_dir))
+    finally:
+        if args.xprof_dir:
+            jax.profiler.stop_trace()
+            print(f"wrote profiler trace -> {args.xprof_dir}")
     n_pr = sum(g.size for g in jax.tree.leaves(
         bank.Gamma, is_leaf=lambda x: x is None) if g is not None)
     print(f"calibrated {args.arch}{' (smoke)' if args.smoke else ''}: "
@@ -140,6 +188,12 @@ def main(argv=None) -> None:
           f"{pcfg.steps / max(bank.meta['search_seconds'], 1e-9):.2f} "
           f"steps/s)")
     print(f"saved mask bank -> {args.out}")
+    if args.trace_dir:
+        import pathlib
+        prom = pathlib.Path(args.trace_dir) / "metrics.prom"
+        prom.write_text(obs.expose())
+        obs.flush()
+        print(f"wrote trace -> {obs.trace_path()} and {prom}")
 
 
 if __name__ == "__main__":

@@ -28,15 +28,24 @@ mesh.  Sparse serving has two modes:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import PruneConfig, get_config, get_smoke_config
 from repro.data.synthetic import batches_for
 from repro.models import model as M
+
+
+def _step_annotation(name: str, step: int, annotate: bool):
+    """StepTraceAnnotation mark when --xprof-dir captures, else nothing."""
+    if not annotate:
+        return contextlib.nullcontext()
+    return jax.profiler.StepTraceAnnotation(name, step_num=step)
 
 
 def _calibrate_sparse(cfg, args, params):
@@ -137,6 +146,7 @@ def _serve_fleet(args, params) -> None:
           f"(reference: {rep['reference']})")
     for name, r in rep["budgets"].items():
         agree = r["token_agreement_vs_reference"]
+        p50, p95 = r["decode_ms_p50"], r["decode_ms_p95"]
         print(f"  {name:>6}: slots {r['slots']}, {r['requests']} reqs, "
               f"{(r['tok_s'] or 0):8.1f} tok/s, "
               f"byte ratio {r['weight_bytes_ratio']:.4f} "
@@ -144,7 +154,9 @@ def _serve_fleet(args, params) -> None:
               f"{r['fallback_leaves']} masked-dense), "
               f"shared dense leaves {r['shared_dense_leaves']}"
               + (f", agreement vs ref {agree:.3f}" if agree is not None
-                 else ""))
+                 else "")
+              + (f", decode p50/p95 {p50:.2f}/{p95:.2f} ms"
+                 if p50 is not None else ""))
 
 
 def main(argv=None) -> None:
@@ -182,8 +194,34 @@ def main(argv=None) -> None:
                     help="fleet decode-slot pool partitioned across "
                          "budgets (default: 2 per budget)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable the flight recorder and write the JSONL "
+                         "event trace + a metrics.prom snapshot here")
+    ap.add_argument("--xprof-dir", default=None,
+                    help="capture a jax profiler trace here, with "
+                         "StepTraceAnnotation marks per prefill/decode "
+                         "step")
     args = ap.parse_args(argv)
 
+    if args.trace_dir:
+        obs.configure(trace_dir=args.trace_dir)
+    if args.xprof_dir:
+        jax.profiler.start_trace(args.xprof_dir)
+    try:
+        _serve(args)
+    finally:
+        if args.xprof_dir:
+            jax.profiler.stop_trace()
+            print(f"wrote profiler trace -> {args.xprof_dir}")
+        if args.trace_dir:
+            import pathlib
+            prom = pathlib.Path(args.trace_dir) / "metrics.prom"
+            prom.write_text(obs.expose())
+            obs.flush()
+            print(f"wrote trace -> {obs.trace_path()} and {prom}")
+
+
+def _serve(args) -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     assert not cfg.is_encoder_decoder or args.gen > 0
     params = M.init_params(cfg, jax.random.key(0))
@@ -208,27 +246,37 @@ def main(argv=None) -> None:
                                              cache_capacity=capacity))
     decode = jax.jit(lambda p, tok, c, t: M.decode_step(cfg, p, tok, c, t))
 
-    t0 = time.time()
-    logits, caches = prefill(params, batch)
-    toks = jnp.argmax(logits, axis=-1)
+    xprof = bool(args.xprof_dir)
+    # obs.timer: perf_counter + block_until_ready fencing on the stage
+    # outputs - async dispatch is charged to the stage that launched it
+    with _step_annotation("prefill", 0, xprof), \
+            obs.timer("launch.prefill", batch=B, prompt_len=P) as tp:
+        logits, caches = prefill(params, batch)
+        toks = jnp.argmax(logits, axis=-1)
+        tp.fence((toks, caches))
     out = [np.asarray(toks)]
-    t_prefill = time.time() - t0
-    t0 = time.time()
     offset = cfg.num_image_tokens if cfg.vit_dim else 0
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, toks, caches,
-                                jnp.asarray(P + offset + i, jnp.int32))
-        if args.temperature > 0:
-            key = jax.random.key(100 + i)
-            toks = jax.random.categorical(key, logits / args.temperature)
-        else:
-            toks = jnp.argmax(logits, axis=-1)
-        out.append(np.asarray(toks))
-    dt = time.time() - t0
+    with obs.timer("launch.decode", steps=args.gen - 1) as td:
+        for i in range(args.gen - 1):
+            sp = obs.span("serve.decode_step")
+            with sp, _step_annotation("decode", i + 1, xprof):
+                logits, caches = decode(params, toks, caches,
+                                        jnp.asarray(P + offset + i,
+                                                    jnp.int32))
+                if args.temperature > 0:
+                    key = jax.random.key(100 + i)
+                    toks = jax.random.categorical(key,
+                                                  logits / args.temperature)
+                else:
+                    toks = jnp.argmax(logits, axis=-1)
+                out.append(np.asarray(toks))
+            if sp.seconds is not None:
+                obs.observe("serve.decode_step_ms", sp.seconds * 1e3)
+        td.fence(toks)
     gen = np.stack(out, axis=1)
-    print(f"prefill {B}x{P} in {t_prefill:.2f}s; "
-          f"decoded {args.gen - 1} steps in {dt:.2f}s "
-          f"({B * (args.gen - 1) / max(dt, 1e-9):.1f} tok/s)")
+    print(f"prefill {B}x{P} in {tp.seconds:.2f}s; "
+          f"decoded {args.gen - 1} steps in {td.seconds:.2f}s "
+          f"({B * (args.gen - 1) / max(td.seconds, 1e-9):.1f} tok/s)")
     print("sample continuation:", gen[0][:16].tolist())
 
 

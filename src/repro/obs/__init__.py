@@ -1,0 +1,39 @@
+"""Flight recorder: unified tracing + metrics across calibration, serving,
+and the fleet.
+
+Three faces, one dependency-free package:
+
+* **spans** - ``obs.span("prefill", slot=s)`` context managers with
+  ``jax.block_until_ready`` fencing at exit (``sp.fence(outputs)``),
+  thread-local nested parenting, and a shared no-op singleton on the
+  disabled path (zero allocation, zero clock reads).
+* **metrics** - a process-local registry of counters, gauges, and
+  fixed-bucket histograms (``obs.inc`` / ``obs.set_gauge`` /
+  ``obs.observe``; read back via ``obs.percentile`` / ``obs.summary``).
+* **exporters** - a JSONL event log under ``--trace-dir``
+  (``obs.configure(trace_dir=...)``), a Prometheus-style text snapshot
+  via ``obs.expose()``, and ``obs.summary()`` merged into the
+  ``BENCH_*.json`` artifacts.
+
+Disabled (the default) every call is a cheap bool check; nothing is
+recorded and no event is written, so the serving/calibration hot paths
+run the exact uninstrumented dispatch sequence.  Enable with
+``obs.configure()`` (optionally ``trace_dir=``), snapshot with
+``obs.summary()`` / ``obs.expose()``, and wipe with ``obs.reset()``.
+"""
+from repro.obs.core import (NOOP_SPAN, Span, configure, counter_value,
+                            declare_hist, disable, emit, enabled, events,
+                            expose, flush, gauge_value, inc, log, observe,
+                            percentile, reset, set_gauge, span, summary,
+                            timer, trace_path)
+from repro.obs.export import JsonlSink, read_jsonl
+from repro.obs.registry import DEFAULT_MS_BUCKETS, Histogram, Registry
+
+__all__ = [
+    "NOOP_SPAN", "Span", "configure", "counter_value", "declare_hist",
+    "disable", "emit", "enabled", "events", "expose", "flush",
+    "gauge_value", "inc", "log", "observe", "percentile", "reset",
+    "set_gauge", "span", "summary", "timer", "trace_path",
+    "JsonlSink", "read_jsonl",
+    "DEFAULT_MS_BUCKETS", "Histogram", "Registry",
+]

@@ -36,12 +36,14 @@ points and therefore compilations.  Request validation happens at
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
@@ -109,11 +111,29 @@ class EngineFns:
         """Jitted chunked prefill for one padded prompt-length bucket."""
         fn = self.prefill_fns.get(bucket)
         if fn is None:
+            obs.inc("serve.jit_entries", surface="prefill", bucket=bucket)
             fn = jax.jit(lambda p, toks: M.prefill(
                 self.cfg, p, {"tokens": toks},
                 cache_capacity=self.capacity)[1])
             self.prefill_fns[bucket] = fn
         return fn
+
+    def jit_cache_sizes(self) -> dict[str, int]:
+        """Compiled-trace count per jit surface (shared across every engine
+        on this EngineFns): the live recompile signal - one entry per
+        distinct params *structure* that hit the surface, so a fleet whose
+        members alias one structure shows 1, not N."""
+        fns = {"decode": self.decode, "write_slot": self.write_slot,
+               **{f"prefill_{b}": f for b, f in self.prefill_fns.items()}}
+        out = {}
+        for surface, fn in fns.items():
+            size = getattr(fn, "_cache_size", None)
+            if callable(size):
+                try:
+                    out[surface] = int(size())
+                except Exception:  # private jax API: absence is not an error
+                    pass
+        return out
 
     def blank_row(self) -> Any:
         """1-slot cache template that resets a reused slot's state."""
@@ -128,7 +148,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
                  capacity: int = 512, decode_mode: str = "fused",
                  rules: Any = None, eos_id: int | None = None,
-                 fns: EngineFns | None = None):
+                 fns: EngineFns | None = None,
+                 labels: dict | None = None):
         assert not cfg.is_encoder_decoder, "decoder-only engine"
         if fns is None:
             fns = EngineFns(cfg, capacity, decode_mode)
@@ -173,6 +194,10 @@ class ServeEngine:
         self.fns = fns
         self._write_slot = fns.write_slot
         self._decode = fns.decode
+        # metric labels stamped on every span/counter/histogram this engine
+        # emits (the fleet labels members by budget so per-budget latency
+        # series stay separable); metadata only, never touches dispatch
+        self.obs_labels = dict(labels or {})
 
     @classmethod
     def from_artifact(cls, bank_dir, params0: Any, *,
@@ -221,6 +246,10 @@ class ServeEngine:
             self._done_unslotted.append(req)
         else:
             self.queue.append(req)
+        if obs.enabled():
+            obs.inc("serve.requests_submitted", **self.obs_labels)
+            obs.set_gauge("serve.queue_depth", len(self.queue),
+                          **self.obs_labels)
         return rid
 
     @property
@@ -240,6 +269,11 @@ class ServeEngine:
             finished = self._step()
             for r in finished:
                 results[r.rid] = r.out
+        if obs.enabled():
+            # compiled-trace counts per shared jit surface: a growing gauge
+            # across runs means a new params structure retraced the fns
+            for surface, size in self.fns.jit_cache_sizes().items():
+                obs.set_gauge("serve.jit_cache_size", size, surface=surface)
         return results
 
     # -- internals -----------------------------------------------------------
@@ -272,31 +306,56 @@ class ServeEngine:
         become visible.
         """
         n = len(req.prompt) - 1  # submit() guarantees 0 <= n < capacity
-        if n == 0:
-            # no prefill forward runs, so nothing replaces the slot's cache
-            # row; reset it explicitly or a reused slot leaks the previous
-            # request's recurrent state (attention rings are position-masked,
-            # ssm/xlstm state is not)
-            row = self.fns.blank_row()
-        else:
-            bucket = self._prefill_bucket(n)
-            fn = self.fns.prefill(bucket)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :n] = req.prompt[:-1]
-            row = fn(self.params, jnp.asarray(toks))
-        self.caches = self._write_slot(self.caches, row, jnp.int32(s))
+        sp = obs.span("serve.prefill", slot=s, prompt_len=len(req.prompt),
+                      **self.obs_labels)
+        with sp:
+            if n == 0:
+                # no prefill forward runs, so nothing replaces the slot's
+                # cache row; reset it explicitly or a reused slot leaks the
+                # previous request's recurrent state (attention rings are
+                # position-masked, ssm/xlstm state is not)
+                row = self.fns.blank_row()
+                sp.set(bucket="blank")
+            else:
+                bucket = self._prefill_bucket(n)
+                fn = self.fns.prefill(bucket)
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :n] = req.prompt[:-1]
+                row = fn(self.params, jnp.asarray(toks))
+                sp.set(bucket=bucket)
+                obs.inc("serve.prefill_bucket_hits", bucket=bucket,
+                        **self.obs_labels)
+            self.caches = self._write_slot(self.caches, row, jnp.int32(s))
+            sp.fence(row)
+        if sp.seconds is not None:
+            obs.observe("serve.prefill_ms", sp.seconds * 1e3,
+                        **self.obs_labels)
         self.pos[s] = max(n, 0)
         req.pending_token = int(req.prompt[-1])
 
     def _step(self) -> list[Request]:
         toks = np.zeros((self.slots,), np.int32)
+        n_active = 0
         for s, req in enumerate(self.active):
             if req is not None:
                 toks[s] = req.pending_token
+                n_active += 1
+        # the decode step is THE hot path: histogram-observe only, no span
+        # event per step (spans are for per-request units like prefill).
+        # The np.asarray(argmax) below is the step's natural sync point, so
+        # the clock pair needs no extra fence: the stop read already
+        # includes the device work this step dispatched.
+        t0 = time.perf_counter() if obs.enabled() else None
         logits, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,
             jnp.asarray(self.pos, jnp.int32))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if t0 is not None:
+            obs.observe("serve.decode_step_ms",
+                        (time.perf_counter() - t0) * 1e3, **self.obs_labels)
+            obs.set_gauge("serve.slot_util", n_active / max(self.slots, 1),
+                          **self.obs_labels)
+            obs.inc("serve.tokens_decoded", n_active, **self.obs_labels)
         finished = []
         for s, req in enumerate(self.active):
             if req is None:
@@ -311,4 +370,7 @@ class ServeEngine:
                 finished.append(req)
                 self.active[s] = None   # freed: _admit reuses it next step
                 self.pos[s] = 0
+        if finished and obs.enabled():
+            obs.inc("serve.requests_retired", len(finished),
+                    **self.obs_labels)
         return finished

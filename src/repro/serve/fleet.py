@@ -42,6 +42,7 @@ from typing import Any, Iterable, Mapping
 import jax
 import numpy as np
 
+from repro import obs
 from repro.serve.engine import EngineFns, ServeEngine
 
 PyTree = Any
@@ -133,6 +134,10 @@ class SparsityFleet:
             raise ValueError(
                 f"{slots} slots cannot cover {len(budgets)} budgets "
                 "(every member needs at least one)")
+        # agreement is a fraction: default ms-scale histogram edges would
+        # lump everything under the first bucket
+        obs.declare_hist("fleet.mirror_agreement",
+                         tuple(i / 10 for i in range(1, 11)))
         # the shared helper: one set of jitted step functions for every
         # member (see EngineFns - compile per params structure, not per
         # engine)
@@ -145,7 +150,7 @@ class SparsityFleet:
             self.engines[b.name] = ServeEngine(
                 self.cfg, params, slots=s, capacity=capacity,
                 decode_mode=decode_mode, rules=rules, eos_id=eos_id,
-                fns=self.fns)
+                fns=self.fns, labels={"budget": b.name})
             self.reports[b.name] = report
         # densest member = the quality reference A/B agreement is scored
         # against (ties break toward earlier budget order)
@@ -157,6 +162,7 @@ class SparsityFleet:
         self._next_rid = 0
         self._ab_served: dict[str, int] = {n: 0 for n in self._order}
         self._stats = {n: {"requests": 0, "tokens": 0, "seconds": 0.0,
+                           "mirrored_picks": 0,
                            "agree_sum": 0.0, "agree_n": 0}
                        for n in self._order}
 
@@ -227,12 +233,18 @@ class SparsityFleet:
         erid = self.engines[name].submit(prompt, max_tokens)
         self._routes[frid] = (name, erid)
         self._stats[name]["requests"] += 1
+        if obs.enabled():
+            obs.inc("fleet.requests", budget=name)
+            obs.set_gauge("fleet.queue_depth",
+                          len(self.engines[name].queue), budget=name)
         if ab is not None and name != self.reference:
             # shadow for live agreement: same prompt through the densest
             # member, consumed by the stats only (never returned to the
             # caller under this frid)
             self._shadows[frid] = self.engines[self.reference].submit(
                 prompt, max_tokens)
+            self._stats[name]["mirrored_picks"] += 1
+            obs.inc("fleet.mirrored_picks", budget=name)
         return frid
 
     def _pick_ab(self, ab) -> str:
@@ -266,13 +278,18 @@ class SparsityFleet:
         for name, eng in self.engines.items():
             if not eng.pending:
                 continue
-            t0 = time.perf_counter()
-            res = eng.run()
-            dt = time.perf_counter() - t0
+            sp = obs.span("fleet.run_member", budget=name)
+            with sp:
+                t0 = time.perf_counter()
+                res = eng.run()
+                dt = time.perf_counter() - t0
             per_engine[name] = res
             st = self._stats[name]
             st["seconds"] += dt
             st["tokens"] += sum(len(v) for v in res.values())
+            if obs.enabled():
+                obs.set_gauge("fleet.queue_depth", len(eng.queue),
+                              budget=name)
         merged: dict[int, list[int]] = {}
         for frid, (name, erid) in list(self._routes.items()):
             res = per_engine.get(name, {})
@@ -284,15 +301,27 @@ class SparsityFleet:
             if shadow is not None:
                 ref_out = per_engine[self.reference][shadow]
                 st = self._stats[name]
-                st["agree_sum"] += token_agreement(merged[frid], ref_out)
+                agree = token_agreement(merged[frid], ref_out)
+                st["agree_sum"] += agree
                 st["agree_n"] += 1
+                obs.observe("fleet.mirror_agreement", agree, budget=name)
         return merged
 
     # -- live quality/latency ------------------------------------------------
 
     def report(self) -> dict:
         """Per-budget serving table: slots, traffic, tok/s, compressed
-        ratio, and A/B token-agreement vs the densest member."""
+        ratio, A/B token-agreement vs the densest member, and (with the
+        flight recorder on) per-budget decode-latency percentiles.
+
+        Every number is LIFETIME-scoped and safe to poll: ``cumulative``
+        holds the monotonic counters (tokens, requests, mirrored picks,
+        busy seconds) and the top-level ``tok_s`` / agreement fields are
+        lifetime averages over exactly those counters - repeated
+        ``report()`` calls never alias an interval rate with a lifetime
+        one.  Interval rates are the caller's delta of two ``cumulative``
+        snapshots.
+        """
         budgets = {}
         for name in self._order:
             st = self._stats[name]
@@ -305,6 +334,19 @@ class SparsityFleet:
                 "token_agreement_vs_reference": (
                     st["agree_sum"] / st["agree_n"] if st["agree_n"]
                     else None),
+                "cumulative": {
+                    "tokens": st["tokens"],
+                    "requests": st["requests"],
+                    "mirrored_picks": st["mirrored_picks"],
+                    "seconds": st["seconds"],
+                },
+                # populated when the flight recorder is enabled (None
+                # otherwise): bucket-estimated percentiles over every
+                # decode step this member served
+                "decode_ms_p50": obs.percentile("serve.decode_step_ms", 50,
+                                                budget=name),
+                "decode_ms_p95": obs.percentile("serve.decode_step_ms", 95,
+                                                budget=name),
                 **self.reports[name],
             }
         return {"reference": self.reference, "budgets": budgets}

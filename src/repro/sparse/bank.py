@@ -15,7 +15,6 @@ configuration; here a new budget is a quantile of a saved tensor.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 import zlib
 from typing import Any, Iterable
 
@@ -23,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import PruneConfig, get_config, get_smoke_config
 
@@ -122,13 +122,18 @@ class MaskBank:
                 f"this build reads <= {FORMAT_VERSION}: refusing a stale "
                 "reader on a newer artifact")
         if version < 2:
-            warnings.warn(
-                f"mask bank at {directory} is a LEGACY format_version=1 "
-                "artifact with no integrity checksum: a truncated or "
-                "bit-rotted leaf would silently re-threshold to wrong "
-                "masks.  Re-save it (launch.calibrate / MaskBank.save) to "
-                "get checksummed format_version=2.",
-                UserWarning, stacklevel=2)
+            # obs.log keeps the stdlib UserWarning contract (filters,
+            # pytest.warns) AND lands the structured record in the same
+            # JSONL stream as the calibration/serving spans
+            obs.log("bank.legacy_format", level="warning",
+                    directory=str(directory), format_version=version,
+                    warn=(
+                        f"mask bank at {directory} is a LEGACY "
+                        "format_version=1 artifact with no integrity "
+                        "checksum: a truncated or bit-rotted leaf would "
+                        "silently re-threshold to wrong masks.  Re-save it "
+                        "(launch.calibrate / MaskBank.save) to get "
+                        "checksummed format_version=2."))
         if cfg is None:
             cfg = _cfg_for(meta["arch"], meta["smoke"])
         tpl = _params_template(cfg)
@@ -179,9 +184,13 @@ class MaskBank:
             key = ("nm", (int(pcfg.nm_n), int(pcfg.nm_m)))
         masks = self._mask_cache.get(key)
         if masks is None:
-            masks = mirror.export_masks(
-                pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
-                V=self.V)
+            sp = obs.span("bank.threshold", budget=str(key))
+            with sp:
+                masks = mirror.export_masks(
+                    pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
+                    V=self.V)
+                sp.fence(masks)
+            obs.inc("bank.threshold_passes")
             self._mask_cache[key] = masks
         return masks
 

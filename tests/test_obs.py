@@ -1,0 +1,275 @@
+"""Flight recorder: spans, registry, JSONL trace, fleet percentiles."""
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.base import PruneConfig, get_smoke_config
+from repro.core import calibrate
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.obs.registry import DEFAULT_MS_BUCKETS, Histogram, Registry
+from repro.serve.fleet import SparsityFleet
+from repro.sparse.bank import MaskBank
+
+CFG = get_smoke_config("llama3.2-1b")
+
+
+@pytest.fixture(autouse=True)
+def clean_recorder():
+    obs.reset()
+    yield
+    obs.reset()
+
+
+# -- spans -------------------------------------------------------------------
+
+
+def test_disabled_span_is_the_shared_noop_singleton():
+    """The disabled hot path must not allocate: every span() call returns
+    ONE shared object whose methods are constant no-ops."""
+    assert not obs.enabled()
+    assert obs.span("a") is obs.span("b")
+    sp = obs.span("decode", slot=3)
+    with sp as inner:
+        assert inner is sp
+        inner.set(bucket=64)   # all no-ops, no state
+        inner.fence(None)
+    assert sp.seconds is None
+    assert obs.events() == []
+
+
+def test_span_nesting_records_parent_and_depth():
+    obs.configure()
+    with obs.span("outer") as outer:
+        with obs.span("inner") as inner:
+            assert inner.parent_id == outer.span_id
+            assert inner.depth == 1
+        with obs.span("inner2") as inner2:
+            assert inner2.parent_id == outer.span_id
+    assert outer.parent_id is None and outer.depth == 0
+    ev = {e["name"]: e for e in obs.events() if e["kind"] == "span"}
+    assert ev["inner"]["parent_id"] == ev["outer"]["span_id"]
+    assert ev["inner"]["depth"] == 1 and ev["outer"]["depth"] == 0
+    # children exit (and land in the buffer) before their parent
+    names = [e["name"] for e in obs.events()]
+    assert names.index("inner") < names.index("outer")
+    assert all(e["dur_ms"] >= 0 and e["ok"] for e in ev.values())
+
+
+def test_span_fence_blocks_on_pending_device_work():
+    obs.configure()
+    x = jax.numpy.ones((64, 64))
+    with obs.span("matmul") as sp:
+        y = x @ x
+        sp.fence(y)
+    assert sp.seconds is not None and sp.seconds >= 0
+    assert np.asarray(y)[0, 0] == 64.0
+
+
+def test_timer_measures_even_while_disabled():
+    """Stage timings feed artifact metadata whether or not the recorder is
+    on - timer() must always return a real measuring span."""
+    assert not obs.enabled()
+    with obs.timer("stage") as t:
+        pass
+    assert t.seconds is not None and t.seconds >= 0
+    assert obs.events() == []   # but it still emits nothing while disabled
+
+
+def test_span_records_exception_and_unwinds_stack():
+    obs.configure()
+    with pytest.raises(RuntimeError):
+        with obs.span("boom"):
+            raise RuntimeError("x")
+    (ev,) = [e for e in obs.events() if e["kind"] == "span"]
+    assert ev["name"] == "boom" and ev["ok"] is False
+    with obs.span("after") as sp:
+        assert sp.depth == 0   # failed span did not leak onto the stack
+
+
+# -- structured logs + warnings contract -------------------------------------
+
+
+def test_log_warn_preserves_stdlib_warning_semantics():
+    obs.configure()
+    with pytest.warns(UserWarning, match="legacy"):
+        obs.log("bank.legacy", level="warning", warn="legacy artifact")
+    # info-level logs never warn, even under -W error
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        obs.log("calibrate.done", steps=4)
+    events = [e for e in obs.events() if e["kind"] == "log"]
+    assert {e["event"] for e in events} == {"bank.legacy", "calibrate.done"}
+    # the warning fires even with the recorder off (no event, same warning)
+    obs.reset()
+    with pytest.warns(UserWarning, match="legacy"):
+        obs.log("bank.legacy", level="warning", warn="legacy artifact")
+    assert obs.events() == []
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_histogram_bucket_edges_follow_le_convention():
+    h = Histogram((1.0, 2.0, 5.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 5.0, 7.0):
+        h.observe(v)
+    # le semantics: bucket i counts edges[i-1] < v <= edges[i]
+    assert h.counts == [2, 2, 1, 1]   # (<=1], (1,2], (2,5], overflow
+    assert h.count == 6 and h.sum == pytest.approx(17.0)
+    assert h.min == 0.5 and h.max == 7.0
+    snap = h.snapshot()
+    assert snap["buckets"]["+Inf"] == 1
+    assert snap["buckets"]["1.0"] == 2
+
+
+def test_histogram_percentiles_clamped_to_observed_range():
+    h = Histogram((1.0, 10.0, 100.0))
+    for v in (3.0, 4.0, 5.0):
+        h.observe(v)
+    p50, p99 = h.percentile(50), h.percentile(99)
+    # interpolation may not leave the observed data range
+    assert 3.0 <= p50 <= 5.0 and 3.0 <= p99 <= 5.0
+    assert Histogram().percentile(50) is None  # empty -> None, not 0
+
+
+def test_registry_counters_gauges_and_label_separation():
+    r = Registry()
+    r.inc("req", 1, {"budget": "0.5"})
+    r.inc("req", 2, {"budget": "0.5"})
+    r.inc("req", 5, {"budget": "2:4"})
+    r.set_gauge("depth", 7, {"budget": "0.5"})
+    assert r.counter_value("req", {"budget": "0.5"}) == 3
+    assert r.counter_value("req", {"budget": "2:4"}) == 5
+    assert r.counter_value("req", {"budget": "0.0"}) == 0
+    assert r.gauge_value("depth", {"budget": "0.5"}) == 7
+    assert r.gauge_value("depth") is None
+
+
+def test_registry_declared_edges_and_prometheus_exposition():
+    r = Registry()
+    r.declare_hist("agree", (0.5, 1.0))
+    r.observe("agree", 0.75)
+    r.observe("lat_ms", 3.0)
+    assert r.hist("agree").edges == (0.5, 1.0)
+    assert r.hist("lat_ms").edges == DEFAULT_MS_BUCKETS
+    text = r.expose()
+    assert '# TYPE agree histogram' in text
+    assert 'agree_bucket{le="1"} 1' in text      # cumulative le buckets
+    assert 'agree_bucket{le="+Inf"} 1' in text
+    assert 'agree_count 1' in text
+    r.inc("tok", 4, {"budget": "2:4"})
+    assert 'tok{budget="2:4"} 4' in r.expose()
+
+
+def test_metric_writes_are_noops_while_disabled():
+    assert not obs.enabled()
+    obs.inc("serve.tokens_decoded", 4)
+    obs.observe("serve.decode_step_ms", 1.5)
+    obs.set_gauge("serve.slot_util", 0.5)
+    assert obs.counter_value("serve.tokens_decoded") == 0
+    assert obs.percentile("serve.decode_step_ms", 50) is None
+    assert obs.gauge_value("serve.slot_util") is None
+
+
+# -- JSONL export ------------------------------------------------------------
+
+
+def test_jsonl_schema_round_trip(tmp_path):
+    obs.configure(trace_dir=tmp_path)
+    with obs.span("prefill", slot=2, prompt_len=7):
+        pass
+    obs.log("calibrate.search_chunk", start=0, steps=2,
+            loss=[1.0, 0.5], sparsity=np.float32(0.25))
+    obs.flush()
+    events = list(obs.read_jsonl(tmp_path / "events.jsonl"))
+    assert [e["kind"] for e in events] == ["span", "log"]
+    span, log = events
+    assert span["name"] == "prefill" and span["dur_ms"] >= 0
+    assert span["attrs"] == {"slot": 2, "prompt_len": 7}
+    assert span["parent_id"] is None and span["depth"] == 0
+    assert "ts" in span and "ts" in log
+    # numpy scalars serialized as plain JSON numbers
+    assert log["sparsity"] == pytest.approx(0.25)
+    assert log["loss"] == [1.0, 0.5]
+    assert obs.trace_path() == tmp_path / "events.jsonl"
+
+
+def test_jsonl_reader_skips_partial_last_line(tmp_path):
+    p = tmp_path / "events.jsonl"
+    p.write_text(json.dumps({"kind": "log", "event": "a"}) + "\n"
+                 + '{"kind": "log", "ev')   # crash mid-write
+    events = list(obs.read_jsonl(p))
+    assert len(events) == 1 and events[0]["event"] == "a"
+
+
+# -- end-to-end: fleet percentiles + search series ---------------------------
+
+
+@pytest.fixture(scope="module")
+def bank_setup(tmp_path_factory):
+    params = M.init_params(CFG, jax.random.key(0))
+    calib = batches_for(CFG, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    stats = calibrate.collect_stats(CFG, params, calib)
+    state, _ = calibrate.run_search(CFG, pcfg, params, calib, stats)
+    d = tmp_path_factory.mktemp("obs_fleet") / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    return params, d
+
+
+def test_fleet_report_percentiles_populated_after_smoke_run(bank_setup):
+    params, d = bank_setup
+    obs.configure()
+    fleet = SparsityFleet.from_artifact(d, params, ["0.0", "2:4"], slots=4,
+                                        capacity=32)
+    for p in [np.array([5, 6, 7, 8]), np.array([9, 10, 11])]:
+        for name in ("0.0", "2:4"):
+            fleet.submit(p, 4, budget=name)
+    fleet.run()
+    rep = fleet.report()
+    for name in ("0.0", "2:4"):
+        r = rep["budgets"][name]
+        assert r["decode_ms_p50"] is not None, name
+        assert r["decode_ms_p95"] is not None, name
+        assert 0 < r["decode_ms_p50"] <= r["decode_ms_p95"]
+        assert r["cumulative"]["tokens"] == r["tokens"] > 0
+    assert obs.counter_value("serve.tokens_decoded", budget="2:4") > 0
+
+
+def test_fleet_report_percentiles_none_without_recorder(bank_setup):
+    params, d = bank_setup
+    assert not obs.enabled()
+    fleet = SparsityFleet.from_artifact(d, params, ["0.0"], slots=2,
+                                        capacity=32)
+    fleet.submit(np.array([5, 6, 7]), 3, budget="0.0")
+    out = fleet.run()
+    assert all(len(v) == 3 for v in out.values())   # serving unaffected
+    rep = fleet.report()["budgets"]["0.0"]
+    assert rep["decode_ms_p50"] is None and rep["decode_ms_p95"] is None
+
+
+def test_run_search_emits_per_chunk_series(tmp_path, bank_setup):
+    params, _ = bank_setup
+    obs.configure(trace_dir=tmp_path)
+    calib = batches_for(CFG, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=4,
+                       scan_chunk=2)
+    stats = calibrate.collect_stats(CFG, params, calib)
+    calibrate.run_search(CFG, pcfg, params, calib, stats)
+    obs.flush()
+    chunks = [e for e in obs.read_jsonl(tmp_path / "events.jsonl")
+              if e.get("kind") == "log"
+              and e.get("event") == "calibrate.search_chunk"]
+    assert len(chunks) == 2   # 4 steps / scan_chunk=2
+    for c in chunks:
+        for k in ("loss", "sparsity", "mask_churn", "gamma_entropy"):
+            assert len(c[k]) == c["steps"] == 2, k
+        assert all(0.0 <= v <= 1.0 for v in c["gamma_entropy"])
+        assert all(0.0 <= v <= 1.0 for v in c["mask_churn"])
+    assert obs.counter_value("calibrate.search_steps") == 4
