@@ -12,6 +12,11 @@ MODEL_FLOPS / (devices * HLO_FLOPs), which exposes remat/redundancy waste.
 
   PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
       [--multi-pod] [--write results/roofline.json]
+
+``--nm-shard`` prints the shard-local analysis of the K-sharded 2:4 kernel
+(kernels/shard.py): per-device arithmetic intensity, bytes moved, and the
+explicit psum payload against LINK_BW - the decision surface for when
+K-partial accumulation beats a replicated kernel.
 """
 from __future__ import annotations
 
@@ -114,12 +119,100 @@ def _note(dom: str, ratio: float, s) -> str:
     return f"collective-bound, dominated by {which}; overlap or re-shard"
 
 
+def nm_shard_roofline(M: int, K: int, N: int, *, devices: int = 1,
+                      idx_bits: int = 2, act_bytes: int = 2) -> dict:
+    """Shard-local roofline of one K-sharded 2:4 kernel call.
+
+    Each device holds a (K/d, N) slice of the compressed kernel - vals
+    (K/(2d), N) bf16 plus the index plane (K/(8d), N) packed-2-bit or
+    (K/(2d), N) int8 - streams its x slice (M, K/d), and produces an f32
+    partial (M, N) that ONE psum over the K axis combines (payload
+    M*N*4 bytes per device, counted by the ``dist.psum_bytes`` site
+    counters at trace time).  FLOPs count the kept weights only
+    (2 * M * K/2 * N multiply-adds, split d ways); a replicated kernel is
+    the devices=1 row with zero collective time.
+    """
+    k_loc = K / devices
+    flops = 2.0 * M * (K / 2) * N / devices        # kept-weight MACs
+    vals_b = (k_loc / 2) * N * 2                   # bf16 vals slice
+    idx_b = (k_loc / 8) * N if idx_bits == 2 else (k_loc / 2) * N
+    x_b = M * k_loc * act_bytes
+    out_b = M * N * 4                              # f32 partial write
+    bytes_moved = vals_b + idx_b + x_b + out_b
+    psum_b = 0.0 if devices == 1 else M * N * 4    # per-device psum payload
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_moved / HBM_BW
+    t_x = psum_b / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    return {
+        "M": M, "K": K, "N": N, "devices": devices, "idx_bits": idx_bits,
+        "flops_per_dev": flops, "bytes_per_dev": bytes_moved,
+        "arith_intensity": flops / bytes_moved,
+        "psum_bytes_per_dev": psum_b,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "t_total_s": max(t_c, t_m) + t_x, "dominant": dom[1],
+    }
+
+
+def nm_shard_table(arch: str = "llama3.2-1b", M: int = 8,
+                   device_counts=(1, 4, 8)) -> list[dict]:
+    """K-sharded kernel roofline over one decode step's projection shapes.
+
+    Decode is tiny-M (M = batch of slots), so the compressed weight bytes
+    dominate ``bytes_per_dev`` and K-sharding divides exactly the dominant
+    term while the psum payload (M*N*4) stays M-small - the table shows the
+    memory-time win per device count next to the collective time it buys.
+    """
+    cfg = get_config(arch)
+    h = cfg.num_heads * cfg.head_dim
+    kv = cfg.num_kv_heads * cfg.head_dim
+    shapes = [("wq", cfg.d_model, h), ("wk", cfg.d_model, kv),
+              ("wv", cfg.d_model, kv), ("wo", h, cfg.d_model),
+              ("up+gate", cfg.d_model, 2 * cfg.d_ff),
+              ("down", cfg.d_ff, cfg.d_model)]
+    rows = []
+    for name, K, N in shapes:
+        for d in device_counts:
+            r = nm_shard_roofline(M, K, N, devices=d)
+            r["proj"] = name
+            rows.append(r)
+    return rows
+
+
+def _print_nm_shard(M: int) -> None:
+    rows = nm_shard_table(M=M)
+    print(f"K-sharded 2:4 kernel, shard-local roofline (decode M={M}):")
+    print(f"{'proj':10s} {'KxN':>12s} {'dev':>4s} {'AI':>7s} "
+          f"{'MB/dev':>8s} {'psum KB':>8s} {'t_mem':>9s} {'t_coll':>9s} "
+          f"{'dom':>6s}")
+    for r in rows:
+        print(f"{r['proj']:10s} {r['K']:>5d}x{r['N']:<6d} "
+              f"{r['devices']:>4d} {r['arith_intensity']:7.2f} "
+              f"{r['bytes_per_dev'] / 1e6:8.3f} "
+              f"{r['psum_bytes_per_dev'] / 1e3:8.2f} "
+              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+              f"{r['dominant'][:6]:>6s}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--write", default="results/roofline.json")
+    ap.add_argument("--nm-shard", action="store_true",
+                    help="shard-local roofline of the K-sharded 2:4 kernel")
+    ap.add_argument("--decode-batch", type=int, default=8,
+                    help="decode batch M for --nm-shard")
     args = ap.parse_args()
+    if args.nm_shard:
+        _print_nm_shard(args.decode_batch)
+        if args.write:
+            p = pathlib.Path(args.write)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(json.dumps(nm_shard_table(M=args.decode_batch),
+                                    indent=1))
+            print("wrote", args.write)
+        return
     d = pathlib.Path(args.dir)
     rows = []
     for arch in ARCH_IDS:

@@ -20,7 +20,11 @@ search steps/s; the obs bench must produce
 ``results/bench/BENCH_obs.json`` with flight-recorder decode overhead
 <= 3%, identical jitted dispatch counts with telemetry on and off,
 per-budget fleet decode p50/p95, and per-chunk search series in the JSONL
-trace under results/bench/obs_trace - and exits non-zero otherwise.
+trace under results/bench/obs_trace; the tensor-parallel bench must produce
+``results/bench/BENCH_tp.json`` (from a forced-4-device child process) with
+the K-sharded engine token-identical to the replicated oracle on (1,4) and
+(2,2) meshes, a static per-decode-trace collective count, and the fused
+up/gate pair costing ONE deferred psum - and exits non-zero otherwise.
 """
 from __future__ import annotations
 
@@ -118,13 +122,32 @@ def smoke() -> None:
         "into the JSONL trace")
     assert ob["trace_span_events"] >= 1, "no span events in the trace"
 
+    from benchmarks import bench_tp
+
+    tp = bench_tp.tp_bench(rows)
+    tp_path = table8_inference.write_serve_json(tp, name="BENCH_tp.json")
+    assert tp_path.exists(), tp_path
+    assert tp["parity"], (
+        "K-sharded decode diverged from the replicated oracle: "
+        f"{ {n: m['tokens_match_replicated'] for n, m in tp['meshes'].items()} }")
+    assert tp["collectives_static"], (
+        "psum counters advanced on a same-shape decode: the collective "
+        "count is not static per trace")
+    psums22 = tp["meshes"]["2x2"]["decode_psums_per_trace"]
+    assert psums22["mlp"] == 2, (
+        f"mlp site costs {psums22['mlp']} psums per decode trace on (2, 2); "
+        "the fused up/gate pair must share ONE deferred psum (2 = pair + "
+        "down, 3 = deferral regressed)")
+    assert psums22["attn"] == 4 and psums22["attn_kv"] >= 1, psums22
+
     print(f"smoke ok: wrote {path} (ratio {ratio:.4f}), {moe_path} "
           f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
           f"kernel-native), {fleet_path} "
           f"({len(fleet['budgets'])} budgets from one bank), {cal_path} "
           f"(scanned search {cal['scanned_vs_eager']:.2f}x eager, stats "
-          f"parity ok) and {ob_path} ({ob['overhead_pct']:.2f}% telemetry "
-          "overhead)")
+          f"parity ok), {ob_path} ({ob['overhead_pct']:.2f}% telemetry "
+          f"overhead) and {tp_path} "
+          f"({tp['devices']}-device K-sharded decode, parity ok)")
 
 
 def main() -> None:
@@ -135,7 +158,7 @@ def main() -> None:
         smoke()
         return
     from benchmarks import (bench_calibrate, bench_fleet, bench_obs,
-                            fig2_high_sparsity, oneshot_export,
+                            bench_tp, fig2_high_sparsity, oneshot_export,
                             table1_unstructured, table2_semistructured,
                             table4_local_metric, table5_mirror_ablation,
                             table8_inference)
@@ -145,7 +168,7 @@ def main() -> None:
     for mod in [table1_unstructured, table2_semistructured,
                 table4_local_metric, table5_mirror_ablation,
                 fig2_high_sparsity, table8_inference, bench_fleet,
-                bench_calibrate, bench_obs, oneshot_export]:
+                bench_calibrate, bench_obs, bench_tp, oneshot_export]:
         name = mod.__name__.split(".")[-1]
         t0 = time.time()
         mod.run(rows)
@@ -173,6 +196,9 @@ def main() -> None:
     if obs_rows:
         table8_inference.write_serve_json(obs_rows[0],
                                           name="BENCH_obs.json")
+    tp_rows = [r for r in rows if r.get("table") == "tp"]
+    if tp_rows:
+        table8_inference.write_serve_json(tp_rows[0], name="BENCH_tp.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

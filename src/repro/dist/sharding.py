@@ -5,19 +5,27 @@ Specs are derived from the logical-axis annotations the model emits
 mapping, with a per-dimension divisibility fallback (a dim that the mapped
 mesh axes do not divide is replicated instead of erroring).
 
-Compressed leaves (``sparse.formats.SparseTensor`` / ``BitMask``) shard too:
-a SparseTensor standing in for a dense (K, N) kernel inherits the dense
-kernel's logical axes - ``vals`` (K/2, N) and ``idx`` (K/2 or K/8, N) both
-take the N-axis sharding, and keep the K-axis sharding whenever the halved
-(vals) / packed-eighthed (idx) dim still divides the mesh axes.  Expert-
+Compressed leaves (``sparse.formats.SparseTensor`` / ``BitMask``) shard too,
+and the K (contraction) dim is FIRST-CLASS: a SparseTensor standing in for
+a dense (K, N) kernel inherits the dense kernel's logical axes, and its K
+sharding is decided once for the *leaf* - both components shard K iff the
+shard-local slices stay kernel-executable, i.e. K % (8 * devices) == 0 for
+2-bit-packed planes (whole index bytes per shard) resp. K % (4 * devices)
+== 0 for int8 planes (whole 2:4 groups).  A leaf that cannot honor its K
+rule replicates BOTH components along K and says so loudly
+(``obs.log(warn=...)`` with the leaf path and axis) instead of the old
+silent per-component divisibility fallback, which could leave ``vals``
+K-sharded with a replicated ``idx`` - a layout no kernel executes.
+K-shardable leaves additionally get a static ``shard`` tag
+(:func:`tag_compressed`) that routes dispatch through the shard-mapped
+kernels in ``kernels/shard.py`` (explicit K-partial accumulation).  Expert-
 banked leaves ((E, K, N) per layer step, possibly under a leading "layers"
-scan axis) carry the expert dim through unchanged: only the trailing two
-dims are compressed, so the leading "experts" logical axis maps onto its
-mesh axes exactly as for the dense bank, with the (K, N) component rules
-applying per expert.  BitMask bits are a flat byte buffer with no
-meaningful axis: replicated.  So a MaskBank-loaded compressed tree placed
-with ``params_sharding`` serves under the production mesh instead of
-replicating every sparse leaf.
+scan axis) carry the expert dim through unchanged.  BitMask bits are a
+flat byte buffer with no meaningful axis: replicated.
+
+``REPRO_FORCE_REPLICATED=1`` forces the replicated-K fallback everywhere
+(no tags stamped, specs keep K unsharded) - the escape hatch for bisecting
+mesh/collective bugs.
 """
 from __future__ import annotations
 
@@ -25,7 +33,9 @@ from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import keystr, tree_map_with_path
 
+from repro import obs
 from repro.dist.axes import ShardingRules, make_rules, spec_for_shape
 from repro.sparse.formats import BitMask, SparseTensor
 
@@ -47,29 +57,132 @@ def _one(axes):
     return axes[0] if isinstance(axes, tuple) and len(axes) == 1 else axes
 
 
+def _axes_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    n = 1
+    for a in ((entry,) if isinstance(entry, str) else tuple(entry)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _site_for(path: str) -> str:
+    """Projection-group label for collective accounting, from the leaf path."""
+    if "['moe']" in path:
+        return "moe"
+    if "['attn']" in path:
+        return "attn"
+    if "['mlp']" in path or "['shared']" in path:
+        return "mlp"
+    return "dense"
+
+
+def sparse_component_layout(axes_str: str | None, st: SparseTensor,
+                            rules: ShardingRules, *, path: str = "",
+                            quiet: bool = False):
+    """One compressed leaf -> (vals_spec, idx_spec, shard_tag).
+
+    The single source of the K-sharding decision, shared by
+    :func:`sparse_leaf_sharding` (the NamedSharding tree) and
+    :func:`tag_compressed` (the dispatch tag) so placement and execution can
+    never disagree.  K shards iff ``K % (group * devices) == 0`` with group
+    8 (2-bit-packed planes: whole index bytes per shard; a byte-padded
+    plane has K % 8 != 0 and never qualifies) resp. 4 (int8 planes: whole
+    2:4 groups per shard); otherwise BOTH components replicate K and a
+    structured warning names the leaf and axis (suppressed with ``quiet``,
+    and entirely under ``REPRO_FORCE_REPLICATED``).  Leading dims (layers /
+    experts) and N keep the dense per-dim divisibility fallback.  The tag
+    is ``(site, *entries)`` over the *executed* dims (leading "layers"
+    stripped - lax.scan slices it away before dispatch) and is None unless
+    K actually shards.
+    """
+    from repro.kernels.shard import replicated_forced
+    mesh = rules.mesh
+    if axes_str is None:
+        return P(), P(), None
+    names = axes_str.split("|")
+    shape = st.shape
+    dense_spec = tuple(rules.spec(names))
+    entries = list(dense_spec) + [None] * (len(shape) - len(dense_spec))
+    lead = []
+    for i, e in enumerate(entries[:-2]):
+        sz = _axes_size(mesh, e)
+        lead.append(e if sz <= 1 or shape[i] % sz == 0 else None)
+    K, N = shape[-2], shape[-1]
+    k_e, n_e = entries[-2], entries[-1]
+    n_keep = n_e if N % _axes_size(mesh, n_e) == 0 else None
+    d = _axes_size(mesh, k_e)
+    forced = replicated_forced()
+    group = 8 if st.idx_bits == 2 else 4
+    k_tag = None
+    spec_k = k_e
+    if k_e is not None and d > 1:
+        if not forced and K % (group * d) == 0:
+            k_tag = k_e
+        else:
+            spec_k = None
+            if not quiet and not forced:
+                obs.log(
+                    "dist.sparse_k_replicated", level="warn",
+                    leaf=path or axes_str, axis=str(k_e), dim=K,
+                    devices=d, idx_bits=st.idx_bits,
+                    warn=(f"compressed leaf {path or axes_str}: K={K} "
+                          f"cannot shard over mesh axis {k_e!r} "
+                          f"({d} devices, needs K % {group * d} == 0 for "
+                          f"{'2-bit-packed' if group == 8 else 'int8'} "
+                          f"index planes); vals AND idx replicate along K"))
+    vals_spec = P(*lead, spec_k, n_keep)
+    idx_spec = P(*lead, spec_k, n_keep)
+    tag = None
+    if k_tag is not None:
+        exec_entries = lead[1:] if names[0] == "layers" else lead
+        tag = (_site_for(path),
+               *(e if _axes_size(mesh, e) > 1 else None
+                 for e in exec_entries),
+               k_tag,
+               n_keep if _axes_size(mesh, n_keep) > 1 else None)
+    return vals_spec, idx_spec, tag
+
+
 def sparse_leaf_sharding(axes_str: str | None, st: SparseTensor,
-                         rules: ShardingRules) -> SparseTensor:
+                         rules: ShardingRules,
+                         path: str = "") -> SparseTensor:
     """Sharding for one SparseTensor leaf, as a matching pytree node.
 
-    Both components reuse the dense kernel's logical axis names (leading
-    "layers" / "experts" axes of stacked and expert-banked leaves included -
-    compression only halves/packs the trailing (K, N) dims, so every leading
-    axis keeps the dense mapping verbatim); only the divisibility check
-    sees the component's actual shape, so the K-dim sharding survives
-    exactly when K/2 (vals) resp. K/2-or-K/8 (idx) still divides the mapped
-    mesh axes.  Returned as a SparseTensor of NamedShardings so the tree is
-    a valid device_put / in_shardings target for the compressed params.
+    Both components reuse the dense kernel's logical axis names; the K dim
+    is decided leaf-wise by :func:`sparse_component_layout` (all-or-nothing
+    across vals/idx, loud on fallback).  Returned as a SparseTensor of
+    NamedShardings - carrying the *input* leaf's static aux (idx_bits and
+    any shard tag) verbatim, so the tree is a valid device_put /
+    in_shardings target whether or not the params were tagged first.
     """
-    if axes_str is None:
-        rep = NamedSharding(rules.mesh, P())
-        return SparseTensor(rep, rep, idx_bits=st.idx_bits)
-    names = axes_str.split("|")
-    return SparseTensor(
-        NamedSharding(rules.mesh,
-                      spec_for_shape(rules, names, st.vals.shape)),
-        NamedSharding(rules.mesh,
-                      spec_for_shape(rules, names, st.idx.shape)),
-        idx_bits=st.idx_bits)
+    vals_spec, idx_spec, _ = sparse_component_layout(axes_str, st, rules,
+                                                     path=path)
+    return SparseTensor(NamedSharding(rules.mesh, vals_spec),
+                        NamedSharding(rules.mesh, idx_spec),
+                        idx_bits=st.idx_bits, shard=st.shard)
+
+
+def tag_compressed(axes_tree: PyTree, params: PyTree,
+                   rules: ShardingRules) -> PyTree:
+    """Stamp every SparseTensor leaf with its tensor-parallel dispatch tag.
+
+    The tag ((site, *mesh-axis entries), static aux - see
+    ``SparseTensor.shard``) is what ``sparse.apply`` dispatches on at trace
+    time: K-sharded leaves route through the shard-mapped kernels with
+    explicit psum accumulation.  Quiet (no fallback warnings): callers pair
+    this with :func:`params_sharding`, which is the loud pass.  Every other
+    leaf passes through untouched (by identity).
+    """
+    def leaf(kp, axes_str, w):
+        if isinstance(w, SparseTensor):
+            _, _, tag = sparse_component_layout(
+                axes_str, w, rules, path=keystr(kp), quiet=True)
+            return w.with_shard(tag) if tag != w.shard else w
+        return w
+
+    return tree_map_with_path(leaf, axes_tree, params,
+                              is_leaf=lambda x: x is None)
 
 
 def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
@@ -80,9 +193,10 @@ def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
     params tree; SparseTensor leaves (compressed kernels) get component-wise
     specs via :func:`sparse_leaf_sharding`, BitMask leaves replicate.
     """
-    def leaf(axes_str, shape_like):
+    def leaf(kp, axes_str, shape_like):
         if isinstance(shape_like, SparseTensor):
-            return sparse_leaf_sharding(axes_str, shape_like, rules)
+            return sparse_leaf_sharding(axes_str, shape_like, rules,
+                                        path=keystr(kp))
         if isinstance(shape_like, BitMask):
             return BitMask(NamedSharding(rules.mesh, P()), shape_like.shape)
         if axes_str is None or shape_like is None:
@@ -91,8 +205,8 @@ def params_sharding(axes_tree: PyTree, shapes_tree: PyTree,
         spec = spec_for_shape(rules, names, shape_like.shape)
         return NamedSharding(rules.mesh, spec)
 
-    return jax.tree.map(leaf, axes_tree, shapes_tree,
-                        is_leaf=lambda x: x is None)
+    return tree_map_with_path(leaf, axes_tree, shapes_tree,
+                              is_leaf=lambda x: x is None)
 
 
 def search_state_sharding(axes_tree: PyTree, state, rules: ShardingRules):

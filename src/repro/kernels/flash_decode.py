@@ -98,3 +98,97 @@ def flash_decode_ref(q, k, v, bias, *, scale=None):
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgc,bckd->bkgd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Partial (un-normalized) variant for capacity-sharded caches
+# ---------------------------------------------------------------------------
+
+def _decode_partial_kernel(q_ref, k_ref, v_ref, bias_ref, acc_o, m_o, l_o,
+                           m_ref, l_ref, acc_ref, *, nc, scale):
+    """Same streaming state as ``_decode_kernel`` but the flush emits the raw
+    (acc, m, l) instead of acc/l - the caller combines partials across
+    capacity shards (pmax on m, psum on rescaled l/acc) before normalizing
+    once.  An all-masked shard flushes m = -1e30, whose cross-shard
+    correction exp(m - m_global) zeroes its partial exactly."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bc, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bc, Dv)
+    s = (q @ k.T) * scale + bias_ref[0]            # (G, bc)
+    m_prev = m_ref[...]                            # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(pl.program_id(2) == nc - 1)
+    def _flush():
+        acc_o[0, 0] = acc_ref[...]
+        m_o[0, 0] = m_ref[...]
+        l_o[0, 0] = l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def flash_decode_partial(q, k, v, bias, *, scale=None, bc: int = 512,
+                         interpret: bool = False):
+    """Un-normalized flash decode over (a shard of) the KV capacity.
+
+    Same operands as :func:`flash_decode`; returns float32
+    ``(acc (B, K, G, Dv), m (B, K, G, 1), l (B, K, G, 1))`` with
+    ``acc = sum_c exp(s_c - m) v_c`` and ``l = sum_c exp(s_c - m)`` - the
+    running softmax state, flushed raw so shard partials combine exactly
+    like the kernel's own chunk accumulation, just across devices.
+    """
+    B, K, G, D = q.shape
+    C = k.shape[1]
+    Dv = v.shape[-1]
+    bc = min(bc, C)
+    assert C % bc == 0, (C, bc)
+    scale = D ** -0.5 if scale is None else scale
+    nc = C // bc
+    return pl.pallas_call(
+        functools.partial(_decode_partial_kernel, nc=nc, scale=scale),
+        grid=(B, K, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, bc, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bc, 1, Dv), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bc), lambda b, h, c: (b, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dv), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, K, G, Dv), jnp.float32),
+                   jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, Dv), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, bias)
+
+
+def flash_decode_partial_ref(q, k, v, bias, *, scale=None):
+    """Materialized (acc, m, l) oracle for the partial kernel."""
+    B, K, G, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bkgd,bckd->bkgc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s + bias[:, None, None, :]
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    return acc, m, l

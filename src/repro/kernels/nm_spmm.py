@@ -107,16 +107,35 @@ def _infer_layout(K: int, idx_shape: tuple[int, ...]) -> str:
     raise ValueError(f"index plane {idx_shape} matches no layout for K={K}")
 
 
+def infer_layout(K: int, idx_shape: tuple[int, ...]) -> str:
+    """Index-plane layout from shapes alone (K/2 rows -> int8, K/8 ->
+    packed2).
+
+    Works on *shard-local* shapes too: under ``shard_map`` each device holds
+    (K_loc/2, N) vals and (K_loc/2 | K_loc/8, N) idx slices of the same
+    layout, and the row ratio is sharding-invariant, so the per-device
+    kernel call infers the layout from its local operands with no global
+    metadata.
+    """
+    return _infer_layout(K, idx_shape)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bk", "bn", "layout", "interpret"))
+                   static_argnames=("bm", "bk", "bn", "layout", "interpret",
+                                    "out_dtype"))
 def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
               bm: int = 128, bk: int = 512, bn: int = 256,
               layout: str | None = None,
-              interpret: bool = False) -> jax.Array:
+              interpret: bool = False, out_dtype=None) -> jax.Array:
     """x: (M, K) @ 2:4-compressed W (K, N) -> (M, N) in x.dtype.
 
     layout: LAYOUT_INT8 (idx (K/2, N) int8) or LAYOUT_PACKED2 (idx (K/8, N)
     uint8, consumed packed - no host-side unpack); None infers from shapes.
+
+    out_dtype: output dtype override (default x.dtype).  The tensor-parallel
+    wrappers pass float32 so K-partial results leave the kernel as the raw
+    f32 accumulator and the cross-device psum adds full-precision partials
+    before the single cast back to the activation dtype.
     """
     M, K = x.shape
     halfK, N = vals.shape
@@ -146,7 +165,7 @@ def nm_matmul(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
             pl.BlockSpec((bk // idx_rows, bn), lambda m, n, k: (k, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
@@ -178,11 +197,12 @@ def _nm_matmul_expert_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, nk,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bk", "bn", "layout", "interpret"))
+                   static_argnames=("bm", "bk", "bn", "layout", "interpret",
+                                    "out_dtype"))
 def nm_matmul_expert(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
                      bm: int = 128, bk: int = 512, bn: int = 256,
                      layout: str | None = None,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False, out_dtype=None) -> jax.Array:
     """Per-expert batch x: (E, M, K) @ 2:4-compressed bank (E, K, N)
     -> (E, M, N) in x.dtype.
 
@@ -221,7 +241,7 @@ def nm_matmul_expert(x: jax.Array, vals: jax.Array, idx: jax.Array, *,
                          lambda e, m, n, k: (e, k, n)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n, k: (e, m, n)),
-        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype or x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_decode import flash_decode, flash_decode_ref
+from repro.kernels.flash_decode import (flash_decode, flash_decode_partial,
+                                        flash_decode_partial_ref,
+                                        flash_decode_ref)
 from repro.kernels.nm_prox import nm_mask24, prox24
 from repro.kernels.nm_spmm import nm_matmul
 
@@ -76,6 +78,15 @@ def decode_attention(q, k, v, bias, *, scale=None):
     if _interp():
         return flash_decode_ref(q, k, v, bias, scale=scale)
     return flash_decode(q, k, v, bias, scale=scale)
+
+
+def decode_attention_partial(q, k, v, bias, *, scale=None):
+    """Un-normalized decode attention over a capacity shard: float32
+    (acc, m, l) partials for the cross-shard pmax/psum combine in
+    ``kernels.shard.decode_attend_sharded``."""
+    if _interp():
+        return flash_decode_partial_ref(q, k, v, bias, scale=scale)
+    return flash_decode_partial(q, k, v, bias, scale=scale)
 
 
 def prox24_op(w: jax.Array, lam: float) -> jax.Array:

@@ -351,6 +351,25 @@ def decode_attend(q, cache_k, cache_v, kpos, t, *, attn_softcap=0.0,
     G = H // K
     scale = D ** -0.5 if scale is None else scale
     qg = q.reshape(B, K, G, D)
+    if not attn_softcap and not seq_sharded:
+        # Tensor-parallel serving (rules installed, capacity-sharded cache
+        # per dist.sharding.cache_sharding): run the partial softmax
+        # shard-mapped over the capacity axis with an explicit pmax/psum
+        # combine, so decode never gathers the KV cache or falls back to a
+        # replicated layout.  No-op (empty axes) off the mesh.
+        from repro.kernels import shard as ksh
+        kv_axes = ksh.kv_shard_axes(B, cache_k.shape[1])
+        if kv_axes:
+            kb_s = kpos if kpos.ndim == 2 else kpos[None]
+            tq_s = jnp.asarray(t, jnp.int32)
+            tb_s = tq_s[:, None] if tq_s.ndim == 1 else tq_s
+            valid = kb_s <= tb_s
+            if window:
+                valid &= tb_s - kb_s < window
+            valid = jnp.broadcast_to(valid, (B, cache_k.shape[1]))
+            o = ksh.decode_attend_sharded(qg, cache_k, cache_v, valid,
+                                          axes=kv_axes, scale=scale)
+            return o.reshape(B, H, D).astype(q.dtype)
     seq_ax = "kv_seq" if seq_sharded else None
     ck = constrain(cache_k, "batch", seq_ax, "kv_heads", None)
     s = jnp.einsum("bkgd,bckd->bkgc", qg, ck,

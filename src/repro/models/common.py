@@ -120,6 +120,25 @@ def expert_dense(params: PyTree, buf: jax.Array) -> jax.Array:
     return jnp.einsum("gecd,edf->gecf", buf, k.astype(COMPUTE_DTYPE))
 
 
+def expert_dense_pair(p_up: PyTree, p_gate: PyTree, buf: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused up+gate expert-bank pair sharing the reduction dim.
+
+    When both banks are compressed AND carry matching K-shard tags, the two
+    expert-grid kernels run under one shard_map with a single deferred psum
+    (one collective for the whole MoE projection group); otherwise falls
+    back to two independent :func:`expert_dense` calls, preserving the
+    dense-einsum and untagged-compressed paths bit-for-bit.
+    """
+    ku, kg = p_up["kernel"], p_gate["kernel"]
+    if isinstance(ku, SparseTensor) and isinstance(kg, SparseTensor):
+        from repro.kernels.shard import pair_k_sharded
+        if pair_k_sharded(ku, kg):
+            from repro.sparse import apply as sparse_apply
+            return sparse_apply.sparse_moe_dense2(ku, kg, buf)
+    return expert_dense(p_up, buf), expert_dense(p_gate, buf)
+
+
 def kernel_dense(params: PyTree) -> jax.Array:
     """Dense view of a (possibly compressed) kernel param, for the few call
     sites that read weights directly (e.g. MLA absorbed-matmul decode)."""

@@ -25,8 +25,12 @@ def mlp_init(b: Builder, d_model: int, d_ff: int, *, gated: bool = True) -> PyTr
 
 def mlp_apply(p: PyTree, x: jax.Array, *, act: str = "silu") -> jax.Array:
     if "gate" in p and _both_sparse(p["up"], p["gate"]):
-        # fused compressed pass: up and gate share the reduction dim, so one
-        # nm_matmul over [up | gate] halves the kernel launches per block
+        # fused compressed pass: up and gate share the reduction dim.
+        # sparse_dense2 picks the route at trace time - K-shard-tagged pairs
+        # run two local kernels under one shard_map with a single deferred
+        # psum for the projection group; untagged pairs keep the concat
+        # fusion (CPU) or two plain kernel calls (TPU, where the pre-concat
+        # would re-copy the weights every step).
         from repro.sparse.apply import sparse_dense2
         h, g = sparse_dense2(p["up"]["kernel"], p["gate"]["kernel"], x)
         h = _act(g, act) * h
@@ -41,13 +45,8 @@ def mlp_apply(p: PyTree, x: jax.Array, *, act: str = "silu") -> jax.Array:
 
 
 def _both_sparse(a: PyTree, b: PyTree) -> bool:
-    import jax as _jax
     from repro.sparse.formats import SparseTensor
-    # fusing pays where per-call overhead dominates (interpret mode); on TPU
-    # the pre-concat of vals/idx would re-copy the weights every step,
-    # costing more HBM traffic than the saved kernel launch
-    return (_jax.default_backend() != "tpu"
-            and isinstance(a["kernel"], SparseTensor)
+    return (isinstance(a["kernel"], SparseTensor)
             and isinstance(b["kernel"], SparseTensor)
             and a["kernel"].idx_bits == b["kernel"].idx_bits)
 

@@ -144,9 +144,10 @@ def moe_apply(p: PyTree, x: jax.Array, *, top_k: int,
     e_ax = "experts" if expert_sharded else None
     # expert_dense dispatches on the bank leaf type: compressed SparseTensor
     # banks run the expert-grid nm_matmul_expert kernel over the dispatch
-    # buffer, dense banks keep the einsum
-    h = cm.expert_dense(p["up"], buf)
-    g = cm.expert_dense(p["gate"], buf)
+    # buffer, dense banks keep the einsum.  The pair helper fuses the shared
+    # reduction dim when both banks are K-shard-tagged: one deferred psum
+    # for the whole up+gate projection group.
+    h, g = cm.expert_dense_pair(p["up"], p["gate"], buf)
     if act == "silu":
         g = jax.nn.silu(g)
     else:

@@ -78,11 +78,17 @@ class EngineFns:
     """
 
     def __init__(self, cfg: ModelConfig, capacity: int,
-                 decode_mode: str = "fused"):
+                 decode_mode: str = "fused", rules: Any = None):
         assert decode_mode in ("fused", "vmap"), decode_mode
         self.cfg = cfg
         self.capacity = capacity
         self.decode_mode = decode_mode
+        # rules make the mesh visible at TRACE time (dist.axes.use_rules
+        # around every jitted body): sparse.apply dispatch sees the K-shard
+        # tags, decode_attend sees the capacity sharding, and the shard_map
+        # wrappers bake the mesh into the jaxpr - tensor-parallel serving
+        # is compiled in, not GSPMD-guessed.  None = single-device/GSPMD.
+        self.rules = rules
         self.prefill_fns: dict[int, Any] = {}   # bucket -> jitted prefill
         self._blank_row = None  # lazily-built slot-reset template
         # slot admission: one jitted dynamic-index row write (slot index is
@@ -98,23 +104,35 @@ class EngineFns:
                 logits, nc = M.decode_step(cfg, p, tok[None], caches, t)
                 return logits[0], jax.tree.map(lambda a: a[:, 0], nc)
 
-            self.decode = jax.jit(jax.vmap(
-                _row_step, in_axes=(None, 0, 1, 0), out_axes=(0, 1)))
+            self.decode = jax.jit(self._under_rules(jax.vmap(
+                _row_step, in_axes=(None, 0, 1, 0), out_axes=(0, 1))))
         else:
             # fused: one decode_step over all slots, per-slot positions as
             # an index vector (no vmapped scan, no per-slot kernel launches)
-            self.decode = jax.jit(
+            self.decode = jax.jit(self._under_rules(
                 lambda p, toks, caches, t: M.decode_step(cfg, p, toks,
-                                                         caches, t))
+                                                         caches, t)))
+
+    def _under_rules(self, fn):
+        """Install the sharding rules for the duration of a trace."""
+        if self.rules is None:
+            return fn
+        from repro.dist.axes import use_rules
+        rules = self.rules
+
+        def traced(*args):
+            with use_rules(rules):
+                return fn(*args)
+        return traced
 
     def prefill(self, bucket: int) -> Any:
         """Jitted chunked prefill for one padded prompt-length bucket."""
         fn = self.prefill_fns.get(bucket)
         if fn is None:
             obs.inc("serve.jit_entries", surface="prefill", bucket=bucket)
-            fn = jax.jit(lambda p, toks: M.prefill(
+            fn = jax.jit(self._under_rules(lambda p, toks: M.prefill(
                 self.cfg, p, {"tokens": toks},
-                cache_capacity=self.capacity)[1])
+                cache_capacity=self.capacity)[1]))
             self.prefill_fns[bucket] = fn
         return fn
 
@@ -152,17 +170,20 @@ class ServeEngine:
                  labels: dict | None = None):
         assert not cfg.is_encoder_decoder, "decoder-only engine"
         if fns is None:
-            fns = EngineFns(cfg, capacity, decode_mode)
+            fns = EngineFns(cfg, capacity, decode_mode, rules=rules)
         elif (fns.cfg, fns.capacity, fns.decode_mode) != \
-                (cfg, capacity, decode_mode):
+                (cfg, capacity, decode_mode) or \
+                (fns.rules is not None and rules is not None
+                 and fns.rules is not rules):
             # a mismatched EngineFns would prefill at the wrong cache
-            # capacity (opaque shape error mid-run) or silently decode
-            # through the other mode - and asserts vanish under python -O
+            # capacity (opaque shape error mid-run), silently decode
+            # through the other mode, or bake a different mesh into the
+            # shared traces - and asserts vanish under python -O
             raise ValueError(
                 "shared EngineFns was built for "
                 f"(capacity={fns.capacity}, decode_mode={fns.decode_mode}) "
                 f"and cannot serve (capacity={capacity}, "
-                f"decode_mode={decode_mode}) or a different cfg")
+                f"decode_mode={decode_mode}) or a different cfg/mesh")
         self.cfg = cfg
         self.slots = slots
         self.capacity = capacity
@@ -174,8 +195,14 @@ class ServeEngine:
         caches = M.init_caches(cfg, slots, capacity)
         if rules is not None:
             from repro.dist import sharding as shd
+            axes = M.param_axes(cfg)
+            # stamp K-shard tags on compressed leaves FIRST: the tags are
+            # pytree aux data, so tagging after device_put would change the
+            # treedef out from under the placed arrays; params_sharding then
+            # mirrors the same tags into its sharding tree (treedefs match)
+            params = shd.tag_compressed(axes, params, rules)
             params = jax.device_put(
-                params, shd.params_sharding(M.param_axes(cfg), params, rules))
+                params, shd.params_sharding(axes, params, rules))
             caches = jax.device_put(
                 caches, shd.cache_sharding(caches, rules.mesh))
         self.params = params

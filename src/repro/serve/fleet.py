@@ -141,7 +141,7 @@ class SparsityFleet:
         # the shared helper: one set of jitted step functions for every
         # member (see EngineFns - compile per params structure, not per
         # engine)
-        self.fns = EngineFns(self.cfg, capacity, decode_mode)
+        self.fns = EngineFns(self.cfg, capacity, decode_mode, rules=rules)
         self.engines: dict[str, ServeEngine] = {}
         self.reports: dict[str, dict] = {}
         for b, s in zip(budgets, _partition_slots(slots, len(budgets))):

@@ -45,7 +45,7 @@ def _largest_block(dim: int, cap: int, mult: int = 1) -> int:
 
 
 def _run_nm(x: jax.Array, vals: jax.Array, idx: jax.Array, layout: str,
-            kernel=nm_matmul) -> jax.Array:
+            kernel=nm_matmul, out_dtype=None) -> jax.Array:
     """Pick block sizes and dispatch: x (M, K) through ``nm_matmul`` or,
     with ``kernel=nm_matmul_expert``, a per-expert batch (E, M, K) through
     the expert-grid kernel (block selection only sees the trailing dims)."""
@@ -58,11 +58,11 @@ def _run_nm(x: jax.Array, vals: jax.Array, idx: jax.Array, layout: str,
         bk_mult = 8 if layout == LAYOUT_PACKED2 else 4
         return kernel(x, vals, idx, bm=_largest_block(m, 128),
                       bk=_largest_block(k, 512, bk_mult), bn=bn,
-                      layout=layout)
+                      layout=layout, out_dtype=out_dtype)
     # interpret mode: one tile (per expert) = one fp32 dot, bit-matching the
     # dense path's contraction
     return kernel(x, vals, idx, bm=m, bk=k, bn=n, layout=layout,
-                  interpret=True)
+                  interpret=True, out_dtype=out_dtype)
 
 
 def _kernel_operand(st: SparseTensor) -> tuple[jax.Array, str]:
@@ -77,12 +77,24 @@ def _kernel_operand(st: SparseTensor) -> tuple[jax.Array, str]:
     return st.unpacked_idx(), layout
 
 
+def _tp(st: SparseTensor) -> bool:
+    """Route through the shard-mapped K-partial kernels?  True when the
+    leaf carries a K-shard tag (``dist.sharding.tag_compressed``) and rules
+    are installed at trace time (``serve.engine.EngineFns(rules=...)``)."""
+    from repro.kernels.shard import k_sharded
+    return k_sharded(st)
+
+
 def sparse_dense(st: SparseTensor, x: jax.Array) -> jax.Array:
     """x: (..., K) @ compressed (K, N) -> (..., N) in x.dtype."""
     assert len(st.vals.shape) == 2, (
         "per-layer kernels only; stacked leaves are sliced by lax.scan")
     *lead, k = x.shape
     x2 = x.reshape(-1, k)
+    if _tp(st):
+        from repro.kernels import shard as ksh
+        y = ksh.nm_dense_sharded(st, x2, site=st.shard_site)
+        return y.reshape(*lead, st.shape[-1])
     idx, layout = _kernel_operand(st)
     y = _run_nm(x2, st.vals.astype(x.dtype), idx, layout)
     return y.reshape(*lead, st.shape[-1])
@@ -105,6 +117,10 @@ def sparse_moe_dense(st: SparseTensor, buf: jax.Array) -> jax.Array:
     G, E, C, d = buf.shape
     assert st.shape[0] == E and st.shape[1] == d, (st.shape, buf.shape)
     x3 = buf.swapaxes(0, 1).reshape(E, G * C, d)
+    if _tp(st):
+        from repro.kernels import shard as ksh
+        y = ksh.nm_moe_sharded(st, x3, site=st.shard_site)
+        return y.reshape(E, G, C, st.shape[-1]).swapaxes(0, 1)
     idx, layout = _kernel_operand(st)
     y = _run_nm(x3, st.vals.astype(buf.dtype), idx, layout,
                 kernel=nm_matmul_expert)
@@ -113,11 +129,29 @@ def sparse_moe_dense(st: SparseTensor, buf: jax.Array) -> jax.Array:
 
 def sparse_dense2(st_a: SparseTensor, st_b: SparseTensor, x: jax.Array
                   ) -> tuple[jax.Array, jax.Array]:
-    """Fused pair sharing the reduction dim (gated-MLP up+gate): one kernel
-    pass over x against [A | B] concatenated along N, then split."""
+    """Fused pair sharing the reduction dim (gated-MLP up+gate).
+
+    Three routes, decided at trace time:
+
+    * K-shard-tagged pair (``kernels.shard.pair_k_sharded``): two local
+      kernels under one shard_map, ONE deferred variadic psum for the whole
+      projection group.
+    * TPU, untagged: two separate kernel calls (a pre-concat of vals/idx
+      would re-copy the weights every step, costing more HBM traffic than
+      the saved launch).
+    * CPU/interpret, untagged: one kernel pass over [A | B] concatenated
+      along N, then split (per-call overhead dominates there).
+    """
+    from repro.kernels import shard as ksh
     *lead, k = x.shape
     na, nb = st_a.shape[-1], st_b.shape[-1]
     x2 = x.reshape(-1, k)
+    if ksh.pair_k_sharded(st_a, st_b):
+        ya, yb = ksh.nm_dense2_sharded(st_a, st_b, x2,
+                                       site=st_a.shard_site)
+        return ya.reshape(*lead, na), yb.reshape(*lead, nb)
+    if jax.default_backend() == "tpu":
+        return sparse_dense(st_a, x), sparse_dense(st_b, x)
     vals = jnp.concatenate([st_a.vals, st_b.vals], axis=-1).astype(x.dtype)
     if (st_a.kernel_layout == LAYOUT_PACKED2
             and st_b.kernel_layout == LAYOUT_PACKED2):
@@ -130,6 +164,20 @@ def sparse_dense2(st_a: SparseTensor, st_b: SparseTensor, x: jax.Array
         layout = LAYOUT_INT8
     y = _run_nm(x2, vals, idx, layout)
     return (y[:, :na].reshape(*lead, na), y[:, na:].reshape(*lead, nb))
+
+
+def sparse_moe_dense2(st_up: SparseTensor, st_gate: SparseTensor,
+                      buf: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused up+gate expert banks over one dispatch buffer (K-shard-tagged
+    pair only): two local expert-grid kernels, one deferred psum across the
+    pair and the expert grid.  Callers check
+    ``kernels.shard.pair_k_sharded`` first."""
+    from repro.kernels import shard as ksh
+    G, E, C, d = buf.shape
+    x3 = buf.swapaxes(0, 1).reshape(E, G * C, d)
+    h, g = ksh.nm_moe2_sharded(st_up, st_gate, x3, site=st_up.shard_site)
+    return (h.reshape(E, G, C, st_up.shape[-1]).swapaxes(0, 1),
+            g.reshape(E, G, C, st_gate.shape[-1]).swapaxes(0, 1))
 
 
 # ---------------------------------------------------------------------------

@@ -60,20 +60,48 @@ def _pack_idx2(idx: jax.Array) -> jax.Array:
 
 @jax.tree_util.register_pytree_node_class
 class SparseTensor:
-    """2:4-compressed weight standing in for a dense (..., K, N) kernel."""
+    """2:4-compressed weight standing in for a dense (..., K, N) kernel.
 
-    def __init__(self, vals: jax.Array, idx: jax.Array, idx_bits: int = 8):
+    ``shard`` is an optional static tensor-parallel tag stamped by
+    ``dist.sharding.tag_compressed``: ``(site, *dim_entries)`` where
+    ``site`` labels the projection group ("mlp" / "attn" / "moe" / "dense")
+    and ``dim_entries`` name the mesh axes of the leaf's *executed* dense
+    dims - ``(k, n)`` for a 2-D kernel, ``(e, k, n)`` for an expert bank
+    (the leading "layers" scan axis is excluded so ``lax.scan`` slicing
+    preserves the tag).  Each entry is None, a mesh-axis name, or a tuple
+    of names.  A non-None K entry routes dispatch through the shard-mapped
+    kernels in ``kernels/shard.py``; None (the default) keeps the
+    single-device / GSPMD path.
+    """
+
+    def __init__(self, vals: jax.Array, idx: jax.Array, idx_bits: int = 8,
+                 shard: tuple | None = None):
         assert idx_bits in (2, 8), idx_bits
         self.vals = vals
         self.idx = idx
         self.idx_bits = idx_bits
+        self.shard = None if shard is None else tuple(shard)
 
     def tree_flatten(self):
-        return (self.vals, self.idx), (self.idx_bits,)
+        return (self.vals, self.idx), (self.idx_bits, self.shard)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, idx_bits=aux[0])
+        return cls(*children, idx_bits=aux[0], shard=aux[1])
+
+    def with_shard(self, shard: tuple | None) -> "SparseTensor":
+        """Same components, new tensor-parallel tag."""
+        return SparseTensor(self.vals, self.idx, idx_bits=self.idx_bits,
+                            shard=shard)
+
+    @property
+    def shard_site(self) -> str | None:
+        return None if self.shard is None else self.shard[0]
+
+    @property
+    def k_shard(self):
+        """Mesh axes of the contraction dim, or None (replicated K)."""
+        return None if self.shard is None else self.shard[-2]
 
     # -- metadata (trace-safe: shapes only) ---------------------------------
 
@@ -135,8 +163,9 @@ class SparseTensor:
         return dense.reshape(*lead, g * 4, n)
 
     def __repr__(self):
+        tag = f", shard={self.shard}" if self.shard is not None else ""
         return (f"SparseTensor(shape={self.shape}, dtype={self.dtype}, "
-                f"idx_bits={self.idx_bits})")
+                f"idx_bits={self.idx_bits}{tag})")
 
 
 @jax.tree_util.register_pytree_node_class

@@ -79,15 +79,19 @@ def test_params_sharding_sparse_leaves_2d_mesh(mesh22):
 
 
 def test_params_sharding_sparse_idx_divisibility_fallback(mesh22):
-    """K = 8: vals rows (4) still shard over data=2, the packed idx plane
-    (1 byte row) falls back to replicated-K but keeps the N sharding."""
+    """K = 8 cannot K-shard over data=2 for a packed2 plane (needs K % 16
+    == 0): BOTH planes replicate along K (all-or-nothing - a vals-only K
+    shard could never feed the shard-local kernel) and a structured warning
+    names the leaf; the N sharding survives."""
     from repro.kernels import ref as kref
     from repro.sparse import pack
     rules = make_rules(mesh22)
     w = jax.random.normal(jax.random.key(1), (8, 64), jnp.float32)
     st = pack.pack_nm(w, kref.nm_mask_ref(w), idx_bits=2)
-    out = shd.params_sharding({"kernel": "embed|mlp"}, {"kernel": st}, rules)
-    assert out["kernel"].vals.spec == P("data", "model")
+    with pytest.warns(UserWarning, match="cannot shard over mesh axis"):
+        out = shd.params_sharding({"kernel": "embed|mlp"}, {"kernel": st},
+                                  rules)
+    assert out["kernel"].vals.spec == P(None, "model")
     assert out["kernel"].idx.spec == P(None, "model")
 
 
