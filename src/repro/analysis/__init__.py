@@ -1,0 +1,28 @@
+"""Static analysis & trace contracts for the jitted hot paths.
+
+Four tools, one package:
+
+* :mod:`repro.analysis.lint` - a dependency-free AST linter with the
+  repo-specific REPRO001-006 rules (host syncs in hot loops, wall-clock
+  timing around async dispatch, silent fallback branches, ``np.`` inside
+  kernel bodies, unhashable jit static args, zipped tree leaves).
+* :mod:`repro.analysis.jaxpr_audit` - walks the ClosedJaxpr of a jit
+  surface and extracts the primitive histogram, host-callback sites,
+  dtype-promotion violations, per-site collective counts (via the
+  ``site:`` named scopes the shard-mapped kernels install), and donation
+  effectiveness from the compiled HLO's input-output aliasing.
+* :mod:`repro.analysis.contracts` - declarative per-surface contract
+  manifests with golden JSONs under ``results/contracts/``; drift fails
+  loudly with a structured diff.
+* :mod:`repro.analysis.recompile` - a recompile sentinel hashing abstract
+  avals + static args per surface, asserting at-most-N distinct compiles
+  per process (``analysis.recompiles`` obs gauge).
+
+``python -m repro.analysis`` is the CLI: ``lint`` / ``audit`` /
+``contracts`` / ``hlo`` (the per-computation HLO attribution that used to
+live in ``benchmarks/hlo_debug.py``).
+
+This module imports neither jax nor numpy; submodules that need jax
+import it themselves, so the linter stays runnable in a bare interpreter
+(and in CI jobs that never install the accelerator stack).
+"""

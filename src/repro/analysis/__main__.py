@@ -1,0 +1,157 @@
+"""One entry point for the static-analysis toolchain.
+
+  python -m repro.analysis lint src/                     # AST linter
+  python -m repro.analysis audit --arch llama3.2-1b \
+      --devices 4 --mesh 2x2                             # jaxpr audit
+  python -m repro.analysis contracts --arch llama3.2-1b \
+      --devices 4 --mesh 2x2 [--update] [--diff-out d.json]
+  python -m repro.analysis hlo results/dryrun/tag.hlo.gz # dump attribution
+
+``--devices N`` forces N host devices; it MUST be consumed before jax is
+imported (XLA fixes the device count at import), which is why this module
+parses it by hand first and only then dispatches to subcommands.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+_USAGE = __doc__
+
+
+def _force_devices(argv: list[str]) -> list[str]:
+    if "--devices" not in argv:
+        return argv
+    import os
+    i = argv.index("--devices")
+    n = int(argv[i + 1])
+    del argv[i:i + 2]
+    assert "jax" not in sys.modules, \
+        "--devices must be handled before anything imports jax"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count={n}")
+    return argv
+
+
+def _parse_mesh(s: str | None):
+    if s in (None, "none", "1dev"):
+        return None
+    return tuple(int(x) for x in s.split("x"))
+
+
+def _cmd_audit(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis audit")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--mesh", default="2x2", help="DxM or 'none'")
+    ap.add_argument("--search", action="store_true",
+                    help="include the calibration search-chunk surface")
+    ap.add_argument("--donation", action="store_true",
+                    help="compile and report donation aliasing too")
+    ap.add_argument("--json", dest="out", default=None)
+    a = ap.parse_args(rest)
+    from repro.analysis import contracts, surfaces
+    mesh = _parse_mesh(a.mesh)
+    surfs = surfaces.all_surfaces(a.arch, mesh_shape=mesh,
+                                  include_search=a.search or None)
+    man = contracts.build_manifest(a.arch, surfs, mesh_shape=mesh,
+                                   donation=a.donation)
+    text = json.dumps(man, indent=1, sort_keys=True)
+    if a.out:
+        with open(a.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+    viols = contracts.policy_violations(man)
+    for v in viols:
+        print(f"POLICY {v['surface']}.{v['field']}: got {v['got']!r}, "
+              f"allowed {v['allowed']!r}", file=sys.stderr)
+    return 1 if viols else 0
+
+
+def _cmd_contracts(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis contracts")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default llama3.2-1b")
+    ap.add_argument("--mesh", default="2x2")
+    ap.add_argument("--dir", default="results/contracts")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate goldens instead of checking")
+    ap.add_argument("--diff-out", default=None,
+                    help="write the structured diff JSON here on failure")
+    a = ap.parse_args(rest)
+    from repro.analysis import contracts, surfaces
+    mesh = _parse_mesh(a.mesh)
+    rc = 0
+    all_diffs = []
+    for arch in (a.arch or ["llama3.2-1b"]):
+        surfs = surfaces.all_surfaces(arch, mesh_shape=mesh)
+        man = contracts.build_manifest(arch, surfs, mesh_shape=mesh)
+        path = contracts.manifest_path(a.dir, arch, mesh)
+        if a.update:
+            contracts.save(path, man)
+            print(f"wrote {path}")
+            continue
+        ok, diffs = contracts.check(path, man)
+        if ok:
+            print(f"{path}: OK "
+                  f"({len(man['surfaces'])} surfaces, no drift)")
+        else:
+            rc = 1
+            all_diffs.extend(diffs)
+            print(f"{path}: CONTRACT DRIFT", file=sys.stderr)
+            for d in diffs:
+                print(f"  {d['surface']}.{d['field']}: golden="
+                      f"{d['golden']!r} current={d['current']!r}",
+                      file=sys.stderr)
+    if all_diffs and a.diff_out:
+        with open(a.diff_out, "w") as f:
+            json.dump(all_diffs, f, indent=1)
+        print(f"diff written to {a.diff_out}", file=sys.stderr)
+    return rc
+
+
+def _cmd_hlo(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis hlo")
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=14)
+    a = ap.parse_args(rest)
+    from repro.launch import hlo_analysis as H
+    text = H.load_text(a.path)
+    rows = sorted(H.attribution(text), reverse=True)
+    print(f"{'bytes':>12s} {'dotflops':>12s} {'coll':>12s} {'mult':>8s} name")
+    for b, f, c, m, n in rows[:a.top]:
+        print(f"{b:12.3e} {f:12.3e} {c:12.3e} {m:8.0f} {n[:70]}")
+    s = H.analyze(text)
+    print(f"\nTOTAL bytes {s.bytes_out:.3e} dotflops {s.dot_flops:.3e} "
+          f"coll {s.coll_bytes:.3e} whiles {s.n_while} "
+          f"trips {sorted(set(s.trip_counts))[:12]}")
+    aliases = H.parse_input_output_aliases(text)
+    if aliases:
+        print(f"input_output_aliases: {len(aliases)}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = _force_devices(list(sys.argv[1:] if argv is None else argv))
+    if not argv or argv[0] in ("-h", "--help"):
+        print(_USAGE)
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "lint":
+        from repro.analysis import lint
+        return lint.main(rest)
+    if cmd == "audit":
+        return _cmd_audit(rest)
+    if cmd == "contracts":
+        return _cmd_contracts(rest)
+    if cmd == "hlo":
+        return _cmd_hlo(rest)
+    print(f"unknown subcommand {cmd!r}\n{_USAGE}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

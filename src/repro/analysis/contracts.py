@@ -1,0 +1,159 @@
+"""Trace contracts: golden manifests per jit surface, checked statically.
+
+A contract manifest pins what a surface's jaxpr is ALLOWED to look like:
+
+* ``psums_by_site``  - collectives per traced call site (one scanned layer
+  body), e.g. the (2,2)-mesh llama decode contract is
+  ``{"mlp": 2, "attn": 4, "attn_kv": 2}`` - identical by construction to
+  the flight recorder's trace-time ``dist.psum`` counters;
+* ``collectives``    - total collective eqns by canonical primitive;
+* ``host_callbacks`` - must be 0 on every hot path;
+* ``large_f32_upcasts`` - silent bf16->f32 promotions of large tensors
+  (K-partial accumulators inside tagged shard_map bodies are exempt);
+* ``arg_bytes`` / ``out_bytes`` / ``dtypes`` - the live-bytes estimate and
+  dtype set (catches silent widening of params or caches);
+* ``donation_declared`` - leaves declared donated (aliasing effectiveness
+  is platform-dependent and stays informational).
+
+Goldens live under ``results/contracts/<arch>_<mesh>.json``.  ``check``
+re-audits the surfaces and produces a structured diff against the golden;
+any drift fails loudly (CI uploads the diff as an artifact).  Regenerate
+on purpose with ``python -m repro.analysis contracts --update``.
+
+Only fields whose values are semantically pinned by OUR code are compared;
+volatile facts (primitive histogram, eqn counts - both move with jax/XLA
+versions) are stored under ``info`` and ignored by the diff.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Iterable
+
+from repro.analysis import jaxpr_audit
+from repro.analysis.surfaces import Surface
+
+__all__ = ["COMPARE_FIELDS", "build_manifest", "diff_manifests", "check",
+           "save", "load", "manifest_path", "policy_violations"]
+
+COMPARE_FIELDS = ("psums_by_site", "collectives", "host_callbacks",
+                  "large_f32_upcasts", "dtypes", "arg_bytes", "out_bytes",
+                  "donation_declared", "policy")
+
+# standing policy every hot surface must satisfy regardless of golden;
+# the upcast ban applies to "serve" surfaces only - "train" surfaces
+# upcast weight gradients to f32 in the backward by design, and their
+# count is pinned by the golden instead (see surfaces.Surface.policy)
+POLICY = {"host_callbacks": 0, "large_f32_upcasts": 0,
+          "forbidden_dtypes": ("float64",)}
+
+
+def _surface_entry(rep: jaxpr_audit.AuditReport, *, policy: str = "serve",
+                   donate_declared: int = 0) -> dict:
+    return {
+        "policy": policy,
+        "psums_by_site": dict(sorted(rep.psums_by_site.items())),
+        "collectives": dict(sorted(rep.collectives.items())),
+        "host_callbacks": len(rep.host_callbacks),
+        "large_f32_upcasts": rep.large_f32_upcasts,
+        "dtypes": rep.dtypes,
+        "arg_bytes": rep.arg_bytes,
+        "out_bytes": rep.out_bytes,
+        "donation_declared": donate_declared,
+        "info": {"n_eqns": rep.n_eqns,
+                 "primitives": dict(sorted(rep.primitives.items())),
+                 "upcasts": rep.upcasts,
+                 "donation": rep.donation},
+    }
+
+
+def build_manifest(name: str, surfaces: Iterable[Surface], *,
+                   mesh_shape: tuple | None = None,
+                   donation: bool = False) -> dict:
+    """Audit every surface and assemble one manifest dict."""
+    import jax
+    out: dict[str, Any] = {"name": name,
+                           "mesh": list(mesh_shape) if mesh_shape else None,
+                           "surfaces": {}}
+    for s in surfaces:
+        rep = jaxpr_audit.audit_fn(s.fn, *s.args, surface=s.name)
+        if donation and s.donate_argnums:
+            rep.donation = jaxpr_audit.audit_donation(
+                s.fn, s.args, s.donate_argnums)
+        out["surfaces"][s.name] = _surface_entry(
+            rep, policy=s.policy, donate_declared=sum(
+                len(jax.tree.leaves(s.args[i])) for i in s.donate_argnums))
+    out["info"] = {"jax": jax.__version__,
+                   "backend": jax.default_backend()}
+    return out
+
+
+def policy_violations(manifest: dict) -> list[dict]:
+    """Standing-policy violations (independent of any golden)."""
+    out = []
+    for name, e in manifest.get("surfaces", {}).items():
+        if e["host_callbacks"] > POLICY["host_callbacks"]:
+            out.append({"surface": name, "field": "host_callbacks",
+                        "got": e["host_callbacks"], "allowed": 0})
+        if (e.get("policy", "serve") == "serve"
+                and e["large_f32_upcasts"] > POLICY["large_f32_upcasts"]):
+            out.append({"surface": name, "field": "large_f32_upcasts",
+                        "got": e["large_f32_upcasts"], "allowed": 0})
+        bad = sorted(set(e["dtypes"]) & set(POLICY["forbidden_dtypes"]))
+        if bad:
+            out.append({"surface": name, "field": "dtypes", "got": bad,
+                        "allowed": f"none of {POLICY['forbidden_dtypes']}"})
+    return out
+
+
+def diff_manifests(golden: dict, current: dict,
+                   fields: tuple = COMPARE_FIELDS) -> list[dict]:
+    """Structured drift between a golden and a freshly-built manifest."""
+    diffs = []
+    gs = golden.get("surfaces", {})
+    cs = current.get("surfaces", {})
+    for name in sorted(set(gs) | set(cs)):
+        if name not in cs:
+            diffs.append({"surface": name, "field": "<surface>",
+                          "golden": "present", "current": "missing"})
+            continue
+        if name not in gs:
+            diffs.append({"surface": name, "field": "<surface>",
+                          "golden": "missing", "current": "present"})
+            continue
+        for f in fields:
+            g, c = gs[name].get(f), cs[name].get(f)
+            if g != c:
+                diffs.append({"surface": name, "field": f,
+                              "golden": g, "current": c})
+    return diffs
+
+
+def manifest_path(contracts_dir, name: str,
+                  mesh_shape: tuple | None) -> pathlib.Path:
+    tag = "x".join(str(d) for d in mesh_shape) if mesh_shape else "1dev"
+    return pathlib.Path(contracts_dir) / f"{name}_{tag}.json"
+
+
+def save(path, manifest: dict) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(manifest, indent=1, sort_keys=True) + "\n")
+
+
+def load(path) -> dict:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+def check(golden_path, current: dict) -> tuple[bool, list[dict]]:
+    """(ok, diffs) of ``current`` vs the golden at ``golden_path``; a
+    missing golden is itself a failure (contracts are committed)."""
+    p = pathlib.Path(golden_path)
+    if not p.exists():
+        return False, [{"surface": "*", "field": "<golden>",
+                        "golden": f"missing file {p}", "current": "built"}]
+    diffs = diff_manifests(load(p), current)
+    diffs.extend({"surface": v["surface"], "field": f"policy:{v['field']}",
+                  "golden": v["allowed"], "current": v["got"]}
+                 for v in policy_violations(current))
+    return not diffs, diffs

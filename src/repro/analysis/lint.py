@@ -1,0 +1,514 @@
+"""Repo-native AST linter: the REPRO rule set for jax hot paths.
+
+Every rule encodes a bug class this repo has actually shipped and later
+dug out of a trace by hand:
+
+REPRO001  host sync on a traced value in a hot path - ``float()`` /
+          ``int()`` / ``.item()`` / ``np.asarray()`` on the result of a
+          jitted callable inside a loop, or anywhere inside a jit/scan
+          body (the ``float(nll)`` per-eval-batch sync in optim/losses).
+REPRO002  wall-clock timing around async dispatch - a ``time.time()`` /
+          ``time.perf_counter()`` pair bracketing a jitted call with no
+          fence (``block_until_ready`` / ``.fence(`` / ``obs.timer``) and
+          no host sync between the clock reads (the PR 6 calibrate-stage
+          timing bug); any wall clock read inside a traced body.
+REPRO003  silent fallback branch - an ``except`` handler that neither
+          raises, warns (``warnings.warn`` / ``obs.log`` / logging), nor
+          carries an inline justification comment on the ``except`` line
+          (the pre-PR 7 silent per-plane sharding fallback class).
+REPRO004  ``np.`` inside a kernel compute body - host numpy in a
+          ``kernels/`` Pallas kernel function (``*_kernel`` or a body
+          referencing ``pl.``/``pltpu.``) traces to a constant or a
+          host round-trip instead of device compute.
+REPRO005  unhashable jit static args - a ``static_argnums`` position or
+          ``static_argnames`` keyword fed a list/dict/set literal
+          (TypeError at call time, or a retrace per call if coerced).
+REPRO006  zipped tree leaves - ``zip(jax.tree.leaves(a),
+          jax.tree.leaves(b))`` without ``strict=True`` silently
+          truncates on structural divergence; use ``jax.tree.map`` or
+          ``zip(..., strict=True)`` (the PR 5 misalignment class).
+
+Suppression: ``# noqa`` or ``# noqa: REPRO001[,REPRO006]`` on the
+offending line.  The linter is dependency-free (stdlib ``ast`` only) so
+it runs in CI before anything heavyweight is installed:
+
+    python -m repro.analysis.lint src/
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import sys
+
+RULES = {
+    "REPRO001": "host sync on a traced value inside a hot path",
+    "REPRO002": "wall-clock timing around async dispatch without a fence",
+    "REPRO003": "silent fallback branch (except with no warn/raise/comment)",
+    "REPRO004": "host numpy inside a kernels/ compute body",
+    "REPRO005": "unhashable literal passed as a jit static arg",
+    "REPRO006": "zip over tree leaves without strict=True",
+}
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "pjit.pjit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_SCAN_NAMES = {"jax.lax.scan", "lax.scan"}
+_TREE_LEAVES = {"jax.tree.leaves", "tree.leaves", "jax.tree_util.tree_leaves",
+                "tree_util.tree_leaves"}
+_CLOCK_NAMES = {"time.time", "time.perf_counter", "time.monotonic"}
+_SYNC_CALLS = {"float", "int", "bool"}
+_NP_SYNC = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "jax.device_get"}
+_WARN_CALLS = {"warnings.warn", "obs.log"}
+_WARN_ATTRS = {"warn", "log", "error", "warning", "exception", "info"}
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"{self.message}")
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.scan' for Attribute chains, 'float' for Names, '' else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    """jax.jit(...) or functools.partial(jax.jit, ...)."""
+    d = _dotted(call.func)
+    if d in _JIT_NAMES:
+        return True
+    if d in _PARTIAL_NAMES and call.args:
+        return _dotted(call.args[0]) in _JIT_NAMES
+    return False
+
+
+def _target_names(target: ast.AST) -> list[str]:
+    """Flat Name ids bound by an assignment target (tuples included)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for elt in target.elts:
+            out.extend(_target_names(elt))
+        return out
+    return []
+
+
+def _base_name(node: ast.AST) -> str:
+    """Root Name id of x / x.attr / x[i] chains, '' otherwise."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _static_argnums(call: ast.Call):
+    """The literal static_argnums of a jax.jit(...) call, as a set of ints
+    (positions in the CALLER's frame: the jitted callable's own args)."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)}
+    return set()
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    """The literal static_argnames of a jax.jit(...) call."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+    return set()
+
+
+def _unhashable_literal(node: ast.AST) -> bool:
+    return isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp))
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """First pass: which names are jitted callables, which function defs
+    are traced contexts (jit-decorated, or passed to jax.jit / lax.scan)."""
+
+    def __init__(self):
+        self.jitted_names: set[str] = set()
+        self.jit_static: dict[str, set[int]] = {}
+        self.jit_static_names: dict[str, set[str]] = {}
+        self.traced_def_names: set[str] = set()
+        self.traced_nodes: set[ast.AST] = set()
+
+    def visit_Assign(self, node: ast.Assign):
+        if isinstance(node.value, ast.Call) and _is_jit_call(node.value):
+            for name in _target_names(node.targets[0] if node.targets
+                                      else ast.Tuple(elts=[])):
+                self.jitted_names.add(name)
+                st = _static_argnums(node.value)
+                if st:
+                    self.jit_static[name] = st
+                sn = _static_argnames(node.value)
+                if sn:
+                    self.jit_static_names[name] = sn
+            for a in node.value.args:
+                if isinstance(a, ast.Name):
+                    self.traced_def_names.add(a.id)
+                elif isinstance(a, ast.Lambda):
+                    self.traced_nodes.add(a)
+        self.generic_visit(node)
+
+    def _scan_decorators(self, node):
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and _is_jit_call(dec):
+                self.traced_nodes.add(node)
+                self.jitted_names.add(node.name)
+            elif _dotted(dec) in _JIT_NAMES:
+                self.traced_nodes.add(node)
+                self.jitted_names.add(node.name)
+
+    def visit_FunctionDef(self, node):
+        self._scan_decorators(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        d = _dotted(node.func)
+        if d in _SCAN_NAMES and node.args:
+            body = node.args[0]
+            if isinstance(body, ast.Name):
+                self.traced_def_names.add(body.id)
+            elif isinstance(body, ast.Lambda):
+                self.traced_nodes.add(body)
+        elif _is_jit_call(node):
+            for a in node.args:
+                if isinstance(a, ast.Name):
+                    self.traced_def_names.add(a.id)
+                elif isinstance(a, ast.Lambda):
+                    self.traced_nodes.add(a)
+        self.generic_visit(node)
+
+
+class _FunctionLinter:
+    """Second pass: per-function rule checks with scope-local dataflow."""
+
+    def __init__(self, scan: _ModuleScan, path: str, lines: list[str],
+                 in_kernels: bool):
+        self.scan = scan
+        self.path = path
+        self.lines = lines
+        self.in_kernels = in_kernels
+        self.findings: list[Finding] = []
+
+    # -- helpers -------------------------------------------------------------
+
+    def _suppressed(self, line: int, rule: str) -> bool:
+        if 1 <= line <= len(self.lines):
+            text = self.lines[line - 1]
+            if "noqa" in text:
+                _, _, tail = text.partition("noqa")
+                tail = tail.strip()
+                if not tail.startswith(":"):
+                    return True      # blanket noqa
+                return rule in tail
+        return False
+
+    def _emit(self, node: ast.AST, rule: str, msg: str):
+        line = getattr(node, "lineno", 0)
+        if not self._suppressed(line, rule):
+            self.findings.append(Finding(self.path, line,
+                                         getattr(node, "col_offset", 0),
+                                         rule, msg))
+
+    def _is_jitted_callable(self, func: ast.AST) -> bool:
+        if isinstance(func, ast.Name):
+            return func.id in self.scan.jitted_names
+        if isinstance(func, ast.Call):
+            return _is_jit_call(func)   # jax.jit(f)(x) inline
+        return False
+
+    # -- entry ---------------------------------------------------------------
+
+    def run(self, fnode, traced: bool):
+        traced = traced or fnode in self.scan.traced_nodes or (
+            isinstance(fnode, ast.FunctionDef)
+            and fnode.name in self.scan.traced_def_names)
+        is_kernel_body = self.in_kernels and self._looks_like_kernel(fnode)
+        body = fnode.body if isinstance(fnode.body, list) else [fnode.body]
+
+        traced_names: set[str] = set()
+        clock_vars: dict[str, int] = {}
+        jit_call_lines: list[int] = []
+        fence_lines: list[int] = []
+
+        nested: list[tuple[ast.AST, bool]] = []
+
+        def walk(node, loop_depth):
+            # don't descend into nested function scopes here; queue them
+            if node is not fnode and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.Lambda)):
+                nested.append((node, traced))
+                return
+            if isinstance(node, ast.Assign):
+                v = node.value
+                if isinstance(v, ast.Call):
+                    d = _dotted(v.func)
+                    if self._is_jitted_callable(v.func):
+                        for t in node.targets:
+                            traced_names.update(_target_names(t))
+                        jit_call_lines.append(node.lineno)
+                    if d in _CLOCK_NAMES:
+                        for t in node.targets:
+                            for name in _target_names(t):
+                                clock_vars[name] = node.lineno
+            if isinstance(node, ast.Call):
+                self._check_call(node, loop_depth, traced, is_kernel_body,
+                                 traced_names, clock_vars, jit_call_lines,
+                                 fence_lines)
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+                self._check_clock_delta(node, clock_vars, jit_call_lines,
+                                        fence_lines)
+            if isinstance(node, ast.ExceptHandler):
+                self._check_except(node)
+            is_loop = isinstance(node, (ast.For, ast.While, ast.AsyncFor))
+            for child in ast.iter_child_nodes(node):
+                walk(child, loop_depth + (1 if is_loop else 0))
+
+        for stmt in body:
+            walk(stmt, 0)
+        for sub, sub_traced in nested:
+            _FunctionLinter.run(self, sub, sub_traced)
+
+    def _looks_like_kernel(self, fnode) -> bool:
+        if isinstance(fnode, ast.FunctionDef) and \
+                fnode.name.endswith("_kernel"):
+            return True
+        for node in ast.walk(fnode):
+            if isinstance(node, ast.Attribute):
+                base = node.value
+                if isinstance(base, ast.Name) and base.id in ("pl", "pltpu"):
+                    return True
+        return False
+
+    # -- rules ---------------------------------------------------------------
+
+    def _check_call(self, node: ast.Call, loop_depth: int, traced: bool,
+                    is_kernel_body: bool, traced_names: set[str],
+                    clock_vars: dict, jit_call_lines: list,
+                    fence_lines: list):
+        d = _dotted(node.func)
+
+        # bookkeeping for REPRO002 fences
+        if ("block_until_ready" in d or d in _NP_SYNC
+                or (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("fence", "block_until_ready"))
+                or d in ("obs.timer", "obs.span")):
+            fence_lines.append(node.lineno)
+
+        # REPRO001: host sync on a traced value
+        sync_arg = None
+        if d in _SYNC_CALLS and node.args and not isinstance(
+                node.args[0], ast.Constant):
+            sync_arg = node.args[0]
+        elif d in _NP_SYNC and node.args:
+            sync_arg = node.args[0]
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            sync_arg = node.func.value
+        if sync_arg is not None:
+            base = _base_name(sync_arg)
+            if base in traced_names and (loop_depth > 0 or traced):
+                self._emit(node, "REPRO001",
+                           f"`{d or 'item'}` on `{base}` pulls a jitted "
+                           "result to host "
+                           + ("inside a traced body" if traced else
+                              "every loop iteration")
+                           + "; accumulate on device and sync once")
+                fence_lines.append(node.lineno)  # it IS a sync, for REPRO002
+            elif base in traced_names:
+                fence_lines.append(node.lineno)
+            elif traced and d in _NP_SYNC:
+                self._emit(node, "REPRO001",
+                           f"`{d}` inside a jit/scan body forces a host "
+                           "round-trip (TracerError or silent constant)")
+
+        # REPRO002: wall clock inside a traced body
+        if d in _CLOCK_NAMES and traced:
+            self._emit(node, "REPRO002",
+                       f"`{d}()` inside a jit/scan body reads the clock at "
+                       "trace time, not run time")
+
+        # REPRO004: host numpy inside a kernels/ compute body
+        if is_kernel_body and (d.startswith("np.") or
+                               d.startswith("numpy.")):
+            self._emit(node, "REPRO004",
+                       f"`{d}` inside a kernel body runs on host at trace "
+                       "time; use jnp/lax (or hoist to the wrapper)")
+
+        # REPRO005: unhashable literal at a static position
+        if self._is_jitted_callable(node.func):
+            jit_call_lines.append(node.lineno)
+            static = set()
+            if isinstance(node.func, ast.Name):
+                static = self.scan.jit_static.get(node.func.id, set())
+            elif isinstance(node.func, ast.Call):
+                static = _static_argnums(node.func)
+            for i in static:
+                if i < len(node.args) and _unhashable_literal(node.args[i]):
+                    self._emit(node.args[i], "REPRO005",
+                               f"static arg {i} is an unhashable literal; "
+                               "jit static args must hash (use a tuple)")
+        # static_argnames misuse: a declared-static keyword fed an
+        # unhashable literal at the call site of the jitted name
+        if isinstance(node.func, ast.Name):
+            static_kw = self.scan.jit_static_names.get(node.func.id, set())
+            for kw in node.keywords:
+                if kw.arg in static_kw and _unhashable_literal(kw.value):
+                    self._emit(kw.value, "REPRO005",
+                               f"static keyword `{kw.arg}` of jitted "
+                               f"`{node.func.id}` is an unhashable literal")
+
+        # REPRO006: zipped tree leaves without strict=True
+        if d == "zip":
+            leaves = [a for a in node.args if isinstance(a, ast.Call)
+                      and _dotted(a.func) in _TREE_LEAVES]
+            strict = any(kw.arg == "strict" and
+                         isinstance(kw.value, ast.Constant) and
+                         kw.value.value is True for kw in node.keywords)
+            if len(leaves) >= 2 and not strict:
+                self._emit(node, "REPRO006",
+                           "zip over tree leaves silently truncates on "
+                           "structural divergence; use jax.tree.map or "
+                           "zip(..., strict=True)")
+
+    def _check_clock_delta(self, node: ast.BinOp, clock_vars: dict,
+                           jit_call_lines: list, fence_lines: list):
+        """t1 - t0 (or time.time() - t0) bracketing a jitted call."""
+        right = node.right
+        r_name = right.id if isinstance(right, ast.Name) else ""
+        if r_name not in clock_vars:
+            return
+        start = clock_vars[r_name]
+        left = node.left
+        stop = node.lineno
+        is_clock_delta = (isinstance(left, ast.Call)
+                          and _dotted(left.func) in _CLOCK_NAMES) or \
+            (isinstance(left, ast.Name) and left.id in clock_vars)
+        if not is_clock_delta:
+            return
+        dispatched = [ln for ln in jit_call_lines if start <= ln <= stop]
+        fenced = [ln for ln in fence_lines if start <= ln <= stop]
+        if dispatched and not fenced:
+            self._emit(node, "REPRO002",
+                       "clock pair brackets an async jitted dispatch with "
+                       "no fence; the delta under-reports device time (use "
+                       "obs.timer / block_until_ready / a host sync)")
+
+    def _check_except(self, node: ast.ExceptHandler):
+        for stmt in ast.walk(node):
+            if isinstance(stmt, ast.Raise):
+                return
+            if isinstance(stmt, ast.Call):
+                d = _dotted(stmt.func)
+                if d in _WARN_CALLS:
+                    return
+                if isinstance(stmt.func, ast.Attribute) and \
+                        stmt.func.attr in _WARN_ATTRS:
+                    return
+        # a comment anywhere in the handler is an accepted justification
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        for ln in range(node.lineno, min(end, len(self.lines)) + 1):
+            if "#" in self.lines[ln - 1]:
+                return
+        self._emit(node, "REPRO003",
+                   "except handler swallows the failure silently; warn "
+                   "(obs.log / warnings.warn), raise, or justify with an "
+                   "inline comment")
+
+
+def lint_source(src: str, path: str = "<string>") -> list[Finding]:
+    """Lint one python source string; returns findings sorted by line."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:  # unparseable file: surfaced as a finding
+        return [Finding(path, e.lineno or 0, 0, "REPRO000",
+                        f"syntax error: {e.msg}")]
+    scan = _ModuleScan()
+    scan.visit(tree)
+    lines = src.splitlines()
+    in_kernels = "kernels" in pathlib.PurePath(path).parts
+    linter = _FunctionLinter(scan, path, lines, in_kernels)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            linter.run(node, traced=False)
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    linter.run(sub, traced=False)
+    linter.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return linter.findings
+
+
+def lint_paths(paths, *, rules: set[str] | None = None) -> list[Finding]:
+    """Lint files / directory trees (``*.py``, tests excluded by callers)."""
+    out: list[Finding] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            found = lint_source(f.read_text(encoding="utf-8"), str(f))
+            if rules:
+                found = [x for x in found if x.rule in rules]
+            out.extend(found)
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="repo-native jax hot-path linter (REPRO001-006)")
+    ap.add_argument("paths", nargs="*", help="files or directories")
+    ap.add_argument("--rules", help="comma-separated rule ids to enable")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid, desc in RULES.items():
+            print(f"{rid}  {desc}")
+        return 0
+    if not args.paths:
+        ap.error("paths required (or --list-rules)")
+    rules = set(args.rules.split(",")) if args.rules else None
+    findings = lint_paths(args.paths, rules=rules)
+    for f in findings:
+        print(f)
+    print(f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

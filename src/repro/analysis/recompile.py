@@ -1,0 +1,119 @@
+"""Recompile sentinel: catch silent retrace storms on the jitted hot paths.
+
+jax.jit retraces whenever the abstract signature of a call changes - a new
+shape, a flipped dtype, a different pytree structure, or an unhashed static
+argument.  On the serving and calibration hot paths every retrace is a
+multi-second stall that the caller never sees attributed; historically these
+only surfaced as mysterious tail latencies.
+
+``note(surface, args)`` hashes the *abstract* signature (treedef + per-leaf
+(shape, dtype), repr for non-array statics) of each dispatch and keeps the
+set of distinct signatures per surface.  Crossing the surface's budget
+raises ``RecompileBudgetError`` with both the budget and the newest
+signature, and every new signature updates the ``analysis.recompiles`` obs
+gauge (labelled by surface) so the flight recorder shows compile-cache
+growth next to latency.
+
+Disabled by default: ``note`` is a single bool check on the hot path.
+Enable around tests/benches with::
+
+    from repro.analysis import recompile
+    recompile.enable(budgets={"decode": 1}, default_budget=4)
+    ... run ...
+    assert recompile.counts()["decode"] == 1
+    recompile.disable()
+
+Instrumented surfaces: ServeEngine decode / prefill_<bucket> / write_slot
+(serve/engine.py) and the calibration search_chunk / search_step
+(core/calibrate.py).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Hashable
+
+from repro import obs
+
+__all__ = ["enable", "disable", "enabled", "reset", "note", "counts",
+           "signature", "RecompileBudgetError"]
+
+
+class RecompileBudgetError(RuntimeError):
+    """A surface exceeded its budget of distinct compile signatures."""
+
+
+_lock = threading.Lock()
+_enabled = False
+_default_budget = 4
+_budgets: dict[str, int] = {}
+_seen: dict[str, dict[Hashable, int]] = {}  # surface -> {sig: first_seen_idx}
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable(budgets: dict[str, int] | None = None, *,
+           default_budget: int = 4) -> None:
+    """Arm the sentinel. ``budgets`` maps surface name -> max distinct
+    signatures; unlisted surfaces get ``default_budget``."""
+    global _enabled, _default_budget
+    with _lock:
+        _budgets.clear()
+        _budgets.update(budgets or {})
+        _default_budget = int(default_budget)
+        _seen.clear()
+        _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def reset() -> None:
+    """Forget all recorded signatures (budgets stay armed)."""
+    with _lock:
+        _seen.clear()
+
+
+def counts() -> dict[str, int]:
+    """Distinct signatures seen per surface since enable()/reset()."""
+    with _lock:
+        return {k: len(v) for k, v in _seen.items()}
+
+
+def signature(args: Any) -> Hashable:
+    """Abstract signature of a call: treedef + (shape, dtype) per array
+    leaf, ``repr`` for everything else (mirrors what jit keys its cache on
+    closely enough to count retraces)."""
+    import jax  # deferred: the linter imports this module jax-free
+    leaves, treedef = jax.tree.flatten(args)
+    sig = []
+    for x in leaves:
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            sig.append((tuple(x.shape), str(x.dtype)))
+        else:
+            sig.append(("static", repr(x)))
+    return (treedef, tuple(sig))
+
+
+def note(surface: str, args: Any) -> bool:
+    """Record one dispatch. Returns True iff the signature is new for this
+    surface. Raises RecompileBudgetError past the surface's budget."""
+    if not _enabled:
+        return False
+    sig = signature(args)
+    with _lock:
+        surf = _seen.setdefault(surface, {})
+        if sig in surf:
+            return False
+        surf[sig] = len(surf)
+        n = len(surf)
+        budget = _budgets.get(surface, _default_budget)
+    obs.set_gauge("analysis.recompiles", float(n), surface=surface)
+    if n > budget:
+        raise RecompileBudgetError(
+            f"surface {surface!r} reached {n} distinct compile signatures "
+            f"(budget {budget}); newest: {sig[1]!r}")
+    return True

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis import recompile
 from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import masks as masks_mod
 from repro.core import metrics as metrics_mod
@@ -114,7 +115,7 @@ def stats_parity(tape_stats: PyTree, jit_stats: PyTree, prunable: PyTree,
     checked = 0
     for t, j, p in zip(jax.tree.leaves(tape_stats, is_leaf=_is_none),
                        jax.tree.leaves(jit_stats, is_leaf=_is_none),
-                       jax.tree.leaves(prunable)):
+                       jax.tree.leaves(prunable), strict=True):
         if not p:
             continue
         assert t is not None, "tape missed a prunable leaf"
@@ -132,6 +133,22 @@ def _stack_chunk(batches: list[dict], start: int, length: int) -> dict:
     sel = [batches[(start + j) % len(batches)] for j in range(length)]
     return jax.tree.map(
         lambda *xs: jnp.asarray(np.stack([np.asarray(x) for x in xs])), *sel)
+
+
+def make_chunk_fn(pcfg: PruneConfig, loss_fn: Callable, stats: PyTree,
+                  prunable: PyTree) -> Callable:
+    """The search-chunk hot path: (state, stacked_batches) -> (state, ms).
+
+    Exposed standalone so ``repro.analysis`` can register the exact function
+    ``run_search`` jits (with ``donate_argnums=0``) as an audit surface -
+    contract checks walk the jaxpr of THIS fn, not a lookalike.
+    """
+    def chunk_fn(st, stacked):
+        return jax.lax.scan(
+            lambda s, b: mirror.search_step(pcfg, loss_fn, s, b, stats,
+                                            prunable),
+            st, stacked)
+    return chunk_fn
 
 
 def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
@@ -200,20 +217,17 @@ def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
                                              prunable),
             donate_argnums=0)
         for n in range(pcfg.steps):
+            b = batches[n % len(batches)]
+            recompile.note("search_step", (state, b))
             sp = obs.span("calibrate.search_step", step=n)
             with sp:
-                state, m = step_fn(state, batches[n % len(batches)])
+                state, m = step_fn(state, b)
                 sp.fence(m)
             record({k: jnp.asarray(v)[None] for k, v in m.items()}, n, 1)
         return state, history
 
-    def chunk_fn(st, stacked):
-        return jax.lax.scan(
-            lambda s, b: mirror.search_step(pcfg, loss_fn, s, b, stats,
-                                            prunable),
-            st, stacked)
-
-    chunk_jit = jax.jit(chunk_fn, donate_argnums=0)
+    chunk_jit = jax.jit(make_chunk_fn(pcfg, loss_fn, stats, prunable),
+                        donate_argnums=0)
     n = 0
     while n < pcfg.steps:
         c = min(chunk, pcfg.steps - n)
@@ -223,6 +237,7 @@ def run_search(cfg: ModelConfig, pcfg: PruneConfig, params0: PyTree,
             stacked = jax.device_put(
                 stacked,
                 sharding_mod.stacked_batch_sharding(stacked, rules.mesh))
+        recompile.note("search_chunk", (state, stacked))
         # fencing on the chunk's metric stack charges device time to the
         # chunk span; with the recorder off there is no fence and dispatch
         # stays fully async (record() then pulls nothing either)

@@ -168,7 +168,8 @@ def search_step(pcfg: PruneConfig, loss_fn: Callable, state: SearchState,
     tot = 0
     for g_old, g in zip(
             jax.tree.leaves(state.Gamma, is_leaf=lambda x: x is None),
-            jax.tree.leaves(Gamma, is_leaf=lambda x: x is None)):
+            jax.tree.leaves(Gamma, is_leaf=lambda x: x is None),
+            strict=True):
         if g is None:
             continue
         nz += jnp.sum(g != 0)

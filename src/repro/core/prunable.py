@@ -39,6 +39,7 @@ def count_prunable(params: Any) -> tuple[int, int]:
     pm = prunable_map(params)
     tot = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
     pru = sum(int(np.prod(x.shape))
-              for x, m in zip(jax.tree.leaves(params), jax.tree.leaves(pm))
+              for x, m in zip(jax.tree.leaves(params), jax.tree.leaves(pm),
+                              strict=True)
               if m)
     return pru, tot

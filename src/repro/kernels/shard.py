@@ -139,8 +139,11 @@ def nm_dense_sharded(st, x2: jax.Array, *, site: str) -> jax.Array:
     idx_plane = st.idx if st.kernel_layout == "packed2" else st.unpacked_idx()
 
     def local(xl, vl, il):
-        y = _local_nm(xl, vl, il)
-        return jax.lax.psum(y, k_axes).astype(out_dt)
+        # the site: scope lands in the psum eqn's name_stack, so the jaxpr
+        # auditor attributes collectives per site without running anything
+        with jax.named_scope(f"site:{site}"):
+            y = _local_nm(xl, vl, il)
+            return jax.lax.psum(y, k_axes).astype(out_dt)
 
     f = cm.shard_map(local, mesh=mesh,
                      in_specs=(P(None, k_e), P(k_e, n_e), P(k_e, n_e)),
@@ -166,10 +169,11 @@ def nm_dense2_sharded(st_a, st_b, x2: jax.Array, *, site: str
     ib = st_b.idx if st_b.kernel_layout == "packed2" else st_b.unpacked_idx()
 
     def local(xl, va, ila, vb, ilb):
-        ya = _local_nm(xl, va, ila)
-        yb = _local_nm(xl, vb, ilb)
-        ya, yb = jax.lax.psum((ya, yb), k_axes)
-        return ya.astype(out_dt), yb.astype(out_dt)
+        with jax.named_scope(f"site:{site}"):
+            ya = _local_nm(xl, va, ila)
+            yb = _local_nm(xl, vb, ilb)
+            ya, yb = jax.lax.psum((ya, yb), k_axes)
+            return ya.astype(out_dt), yb.astype(out_dt)
 
     f = cm.shard_map(local, mesh=mesh,
                      in_specs=(P(None, k_e), P(k_e, n_a), P(k_e, n_a),
@@ -202,8 +206,9 @@ def nm_moe_sharded(st, x3: jax.Array, *, site: str = "moe") -> jax.Array:
     idx_plane = st.idx if st.kernel_layout == "packed2" else st.unpacked_idx()
 
     def local(xl, vl, il):
-        y = _local_nm(xl, vl, il, expert=True)
-        return jax.lax.psum(y, k_axes).astype(out_dt)
+        with jax.named_scope(f"site:{site}"):
+            y = _local_nm(xl, vl, il, expert=True)
+            return jax.lax.psum(y, k_axes).astype(out_dt)
 
     f = cm.shard_map(local, mesh=mesh,
                      in_specs=(P(e_e, None, k_e), P(e_e, k_e, n_e),
@@ -233,10 +238,11 @@ def nm_moe2_sharded(st_up, st_gate, x3: jax.Array, *, site: str = "moe"
           else st_gate.unpacked_idx())
 
     def local(xl, vu, ilu, vg, ilg):
-        h = _local_nm(xl, vu, ilu, expert=True)
-        g = _local_nm(xl, vg, ilg, expert=True)
-        h, g = jax.lax.psum((h, g), k_axes)
-        return h.astype(out_dt), g.astype(out_dt)
+        with jax.named_scope(f"site:{site}"):
+            h = _local_nm(xl, vu, ilu, expert=True)
+            g = _local_nm(xl, vg, ilg, expert=True)
+            h, g = jax.lax.psum((h, g), k_axes)
+            return h.astype(out_dt), g.astype(out_dt)
 
     f = cm.shard_map(local, mesh=mesh,
                      in_specs=(P(e_e, None, k_e), P(e_e, k_e, n_u),
@@ -298,28 +304,30 @@ def decode_attend_sharded(qg: jax.Array, cache_k: jax.Array,
         _count("attn_kv", B * Kh * G * (1 + Dv) * 4, n_psum=2)
 
         def local(q, ck, cv, okl):
-            s = jnp.einsum("bkgd,bckd->bkgc", q, ck,
-                           preferred_element_type=jnp.float32) * scale
-            s = jnp.where(okl[:, None, None, :], s, NEG)
-            m = jax.lax.pmax(jnp.max(s, axis=-1, keepdims=True), axes)
-            p = jnp.exp(s - m)
-            l = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axes)
-            w = (p / l).astype(cv.dtype)
-            o = jnp.einsum("bkgc,bckd->bkgd", w, cv,
-                           preferred_element_type=jnp.float32)
-            return jax.lax.psum(o, axes).astype(qg.dtype)
+            with jax.named_scope("site:attn_kv"):
+                s = jnp.einsum("bkgd,bckd->bkgc", q, ck,
+                               preferred_element_type=jnp.float32) * scale
+                s = jnp.where(okl[:, None, None, :], s, NEG)
+                m = jax.lax.pmax(jnp.max(s, axis=-1, keepdims=True), axes)
+                p = jnp.exp(s - m)
+                l = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axes)
+                w = (p / l).astype(cv.dtype)
+                o = jnp.einsum("bkgc,bckd->bkgd", w, cv,
+                               preferred_element_type=jnp.float32)
+                return jax.lax.psum(o, axes).astype(qg.dtype)
     else:
         # flash partial + 1 pmax + 1 variadic psum over (l, acc)
         _count("attn_kv", B * Kh * G * (1 + Dv) * 4, n_psum=1)
 
         def local(q, ck, cv, okl):
-            bias = jnp.where(okl, 0.0, NEG).astype(jnp.float32)
-            acc, m, l = ops.decode_attention_partial(q, ck, cv, bias,
-                                                     scale=scale)
-            mg = jax.lax.pmax(m, axes)
-            corr = jnp.exp(m - mg)
-            l, acc = jax.lax.psum((l * corr, acc * corr), axes)
-            return (acc / jnp.maximum(l, 1e-30)).astype(qg.dtype)
+            with jax.named_scope("site:attn_kv"):
+                bias = jnp.where(okl, 0.0, NEG).astype(jnp.float32)
+                acc, m, l = ops.decode_attention_partial(q, ck, cv, bias,
+                                                         scale=scale)
+                mg = jax.lax.pmax(m, axes)
+                corr = jnp.exp(m - mg)
+                l, acc = jax.lax.psum((l * corr, acc * corr), axes)
+                return (acc / jnp.maximum(l, 1e-30)).astype(qg.dtype)
 
     ax = axes[0] if len(axes) == 1 else axes
     f = cm.shard_map(local, mesh=mesh,

@@ -108,7 +108,7 @@ def ensure_bank(out_dir, *, cfg, pcfg: PruneConfig, params: PyTree,
                 == params_fingerprint(params)):
             return bank
     except (FileNotFoundError, ValueError, AssertionError, KeyError):
-        pass
+        pass  # absent/stale/corrupt bank: fall through and recalibrate
     return calibrate_to_bank(out_dir, cfg=cfg, pcfg=pcfg, params=params,
                              calib=calib, arch=arch, smoke=smoke, **kw)
 

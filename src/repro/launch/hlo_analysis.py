@@ -23,6 +23,11 @@ Conventions:
     buffers; the roofline memory term uses 2x (write + read).
   * collective bytes = wire convention: all-gather/all-to-all/permute ->
     output size; all-reduce -> 2x size; reduce-scatter -> group_size x out.
+  * async collectives appear as ``<op>-start`` / ``<op>-done`` pairs; the
+    traffic is charged on the -start and the -done is skipped, so each
+    pair counts exactly once.
+  * dumps may be tab-indented and/or CRLF-terminated (some toolchains
+    rewrite them); both are normalized before parsing.
 """
 from __future__ import annotations
 
@@ -47,6 +52,11 @@ NO_BYTES_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
                 "bitcast(", "bitcast-convert(", "after-all(", "while(",
                 "partition-id(", "replica-id(", "custom-call(",
                 "conditional(", "call(")
+
+
+def _normalize(text: str) -> str:
+    """Tolerate rewritten dumps: CRLF line endings, tab indentation."""
+    return text.replace("\r\n", "\n").replace("\r", "\n").expandtabs(2)
 
 
 def _numel(dims: str) -> int:
@@ -129,8 +139,13 @@ def _analyze_comp(lines: list[str]) -> CompStats:
                             contracted *= lhs_dims[di]
             st.dot_flops += 2.0 * numel * contracted
 
-        is_coll = next((c for c in COLLECTIVES if f" {c}(" in rhs), None)
-        if is_coll and "-start" not in rhs:
+        # sync form " all-reduce(" OR async start " all-reduce-start(";
+        # the matching "-done(" only materializes the result, skip it so an
+        # async pair is charged exactly once (on the -start, which carries
+        # the replica_groups).
+        is_coll = next((c for c in COLLECTIVES
+                        if f" {c}(" in rhs or f" {c}-start(" in rhs), None)
+        if is_coll and f" {is_coll}-done(" not in rhs:
             g = _GROUPS.search(rhs)
             gs = int(g.group(2)) if g else 0
             traffic = nbytes
@@ -185,7 +200,7 @@ class HloSummary:
 
 
 def analyze(text: str) -> HloSummary:
-    raw, entry = _parse_computations(text)
+    raw, entry = _parse_computations(_normalize(text))
     comps = {name: _analyze_comp(lines) for name, lines in raw.items()}
     if entry is None:
         entry = next(iter(comps))
@@ -219,6 +234,90 @@ def analyze(text: str) -> HloSummary:
 
 
 def analyze_file(path) -> HloSummary:
+    return analyze(load_text(path))
+
+
+def load_text(path) -> str:
+    """Read an HLO dump, transparently gunzipping ``*.gz``."""
     op = gzip.open if str(path).endswith(".gz") else open
     with op(path, "rt") as f:
-        return analyze(f.read())
+        return f.read()
+
+
+def attribution(text: str) -> list[tuple]:
+    """Per-computation attribution of the roofline terms after trip-count
+    multiplication: rows of (bytes, dot_flops, coll_bytes, mult, name),
+    unsorted.  Localizes the dominant term when the totals from
+    ``analyze`` look wrong (CLI: ``python -m repro.analysis hlo``)."""
+    raw, entry = _parse_computations(_normalize(text))
+    comps = {name: _analyze_comp(lines) for name, lines in raw.items()}
+    if entry is None and comps:
+        entry = next(iter(comps))
+    rows: list[tuple] = []
+
+    def fusion_flops(name, depth=0) -> float:
+        """dot flops of a computation INCLUDING its fusion callees - a
+        fusion's work belongs to the computation that launches it, so the
+        rows sum to analyze()'s totals instead of hiding fused dots."""
+        st = comps.get(name)
+        if st is None or depth > 64:
+            return 0.0
+        tot = st.dot_flops
+        for kind, callee, _ in st.calls:
+            if kind == "fusion":
+                tot += fusion_flops(callee, depth + 1)
+        return tot
+
+    def visit(name, mult, parent_mult, in_fusion, depth=0):
+        st = comps.get(name)
+        if st is None or depth > 64:
+            return
+        if not in_fusion:
+            rows.append((mult * st.bytes_out + parent_mult * st.dus_bytes,
+                         mult * fusion_flops(name),
+                         mult * st.coll_bytes, mult, name))
+        for kind, callee, cond in st.calls:
+            if kind == "while":
+                trip = comps[cond].trip_hint if cond in comps else 1
+                visit(callee, mult * trip, mult, in_fusion, depth + 1)
+            elif kind == "fusion":
+                visit(callee, mult, parent_mult, True, depth + 1)
+            else:
+                visit(callee, mult, parent_mult, in_fusion, depth + 1)
+
+    visit(entry, 1.0, 1.0, False)
+    return rows
+
+
+_ALIAS_ENTRY = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\},\s*(may-alias|must-alias)\)")
+
+
+def parse_input_output_aliases(text: str) -> list[dict]:
+    """Input->output buffer aliases from a compiled HloModule header.
+
+    The header carries ``input_output_alias={ {out}: (param, {idx}, kind),
+    ... }``; each entry is one donated buffer XLA actually aliased.  A
+    declared ``donate_argnums`` whose buffer is missing here was silently
+    un-donated (dtype mismatch, aliasing hazard) - the jaxpr auditor's
+    donation check diffs this list against the declaration.
+    """
+    m = re.search(r"input_output_alias=\{", text)
+    if not m:
+        return []
+    i, depth = m.end(), 1
+    while i < len(text) and depth:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    block = text[m.end():i - 1]
+    out = []
+    for em in _ALIAS_ENTRY.finditer(block):
+        ints = lambda s: [int(x) for x in s.replace(" ", "").split(",") if x]
+        out.append({"output_index": ints(em.group(1)),
+                    "param_number": int(em.group(2)),
+                    "param_index": ints(em.group(3)),
+                    "kind": em.group(4)})
+    return out

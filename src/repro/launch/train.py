@@ -78,8 +78,11 @@ def main() -> None:
                      next(loader).items()}
             params, ostate, metrics = step_fn(params, ostate, batch)
             if step % args.log_every == 0:
-                print(f"step {step} loss {float(metrics['loss']):.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                # deliberate log-interval sync: pulling the loss every
+                # log_every steps IS the progress heartbeat
+                print(f"step {step} loss "
+                      f"{float(metrics['loss']):.4f} "  # noqa: REPRO001
+                      f"gnorm {float(metrics['grad_norm']):.3f} "  # noqa: REPRO001
                       f"({time.time() - t0:.1f}s)", flush=True)
             if mgr and (step + 1) % args.ckpt_every == 0:
                 mgr.save_async(step + 1, (params, ostate),

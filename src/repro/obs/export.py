@@ -74,4 +74,4 @@ def read_jsonl(path) -> Iterator[dict]:
             try:
                 yield json.loads(line)
             except json.JSONDecodeError:
-                return
+                return  # partial trailing line (writer mid-flush): stop

@@ -30,14 +30,19 @@ def lm_loss(cfg: ModelConfig, params: Any, batch: dict, *,
 
 
 def eval_ppl(cfg: ModelConfig, params: Any, batches: list[dict]) -> float:
-    """Perplexity over a list of batches (held-out synthetic corpus)."""
-    tot_nll = 0.0
-    tot_tok = 0
+    """Perplexity over a list of batches (held-out synthetic corpus).
+
+    The per-batch NLL stays on device (``float(nll)`` here used to force a
+    host sync per batch, serializing the eval loop against async dispatch -
+    REPRO001); the weighted sum accumulates as a device scalar and syncs
+    exactly once at the end.
+    """
     fn = jax.jit(lambda p, b: lm_loss(cfg, p, b)[1]["nll"])
+    tot_nll = jnp.zeros((), jnp.float32)
+    tot_tok = 0
     for b in batches:
-        nll = fn(params, b)
         n = b["tokens"][:, 1:].size
-        tot_nll += float(nll) * n
+        tot_nll = tot_nll + fn(params, b) * n
         tot_tok += n
     import math
-    return math.exp(min(tot_nll / max(tot_tok, 1), 30.0))
+    return math.exp(min(float(tot_nll) / max(tot_tok, 1), 30.0))

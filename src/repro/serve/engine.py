@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis import recompile
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
@@ -348,10 +349,16 @@ class ServeEngine:
                 fn = self.fns.prefill(bucket)
                 toks = np.zeros((1, bucket), np.int32)
                 toks[0, :n] = req.prompt[:-1]
+                if recompile.enabled():
+                    recompile.note(f"prefill_{bucket}", (self.params, toks))
                 row = fn(self.params, jnp.asarray(toks))
                 sp.set(bucket=bucket)
                 obs.inc("serve.prefill_bucket_hits", bucket=bucket,
                         **self.obs_labels)
+            if recompile.enabled():
+                # np scalar, not python int: the slot index is a traced
+                # operand, so every slot shares one compile signature
+                recompile.note("write_slot", (self.caches, row, np.int32(s)))
             self.caches = self._write_slot(self.caches, row, jnp.int32(s))
             sp.fence(row)
         if sp.seconds is not None:
@@ -372,6 +379,9 @@ class ServeEngine:
         # The np.asarray(argmax) below is the step's natural sync point, so
         # the clock pair needs no extra fence: the stop read already
         # includes the device work this step dispatched.
+        if recompile.enabled():
+            recompile.note("decode", (self.params, toks, self.caches,
+                                      self.pos))
         t0 = time.perf_counter() if obs.enabled() else None
         logits, self.caches = self._decode(
             self.params, jnp.asarray(toks), self.caches,

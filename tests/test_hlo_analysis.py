@@ -1,0 +1,124 @@
+"""First direct unit tests for launch.hlo_analysis against a small golden
+HLO text fixture: while-loop trip multiplication, fusion internals, sync
+AND async-pair collectives (counted once, not zero/twice), tab/CRLF dump
+tolerance, input_output_alias parsing, and per-computation attribution.
+"""
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+# A hand-built optimized-HLO-shaped dump: entry calls a while loop (trip
+# count 3 from the condition's constant) whose body does one dot via a
+# fusion, one sync all-reduce, and one async all-gather start/done pair.
+GOLDEN = textwrap.dedent("""\
+    HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias) }, entry_computation_layout={(f32[8,16])->f32[8,16]}
+
+    %fused_dot (p0: f32[8,16], p1: f32[16,16]) -> f32[8,16] {
+      %p0 = f32[8,16] parameter(0)
+      %p1 = f32[16,16] parameter(1)
+      ROOT %d = f32[8,16] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    %body (arg: (s32[], f32[8,16], f32[16,16])) -> (s32[], f32[8,16], f32[16,16]) {
+      %arg = (s32[], f32[8,16], f32[16,16]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %x = f32[8,16] get-tuple-element(%arg), index=1
+      %w = f32[16,16] get-tuple-element(%arg), index=2
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      %y = f32[8,16] fusion(%x, %w), kind=kOutput, calls=%fused_dot
+      %ar = f32[8,16] all-reduce(%y), replica_groups=[1,4], to_apply=%sum
+      %ag.start = f32[8,16] all-gather-start(%ar), replica_groups=[2,2], dimensions={0}
+      %ag.done = f32[8,16] all-gather-done(%ag.start)
+      ROOT %out = (s32[], f32[8,16], f32[16,16]) tuple(%ip, %ag.done, %w)
+    }
+
+    %cond (carg: (s32[], f32[8,16], f32[16,16])) -> pred[] {
+      %carg = (s32[], f32[8,16], f32[16,16]) parameter(0)
+      %ci = s32[] get-tuple-element(%carg), index=0
+      %trip = s32[] constant(3)
+      ROOT %lt = pred[] compare(%ci, %trip), direction=LT
+    }
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (e0: f32[8,16], e1: f32[16,16]) -> f32[8,16] {
+      %e0 = f32[8,16] parameter(0)
+      %e1 = f32[16,16] parameter(1)
+      %zero = s32[] constant(0)
+      %t = (s32[], f32[8,16], f32[16,16]) tuple(%zero, %e0, %e1)
+      %w = (s32[], f32[8,16], f32[16,16]) while(%t), condition=%cond, body=%body
+      ROOT %r = f32[8,16] get-tuple-element(%w), index=1
+    }
+""")
+
+F32 = 4
+OUT_BYTES = 8 * 16 * F32          # one f32[8,16] buffer
+
+
+def test_while_trip_count_multiplies_body():
+    s = H.analyze(GOLDEN)
+    assert s.n_while == 1
+    assert s.trip_counts == [3]
+    # fused dot: 2 * numel(out) * contracted = 2 * 128 * 16, x3 trips
+    assert s.dot_flops == 3 * 2 * 128 * 16
+
+
+def test_async_collective_pair_counted_exactly_once():
+    s = H.analyze(GOLDEN)
+    # sync all-reduce: 2x bytes; async all-gather pair: 1x bytes ONCE
+    # (the -done materialization must not double it), each x3 trips
+    assert s.coll_by_op["all-reduce"] == 3 * 2 * OUT_BYTES
+    assert s.coll_by_op["all-gather"] == 3 * OUT_BYTES
+    assert s.coll_bytes == 3 * 3 * OUT_BYTES
+
+
+def test_fusion_internals_not_double_counted():
+    s = H.analyze(GOLDEN)
+    # materialized per trip: ip(s32, 4B) + fusion out + all-reduce out +
+    # ag.start + ag.done, x3 trips.  The fusion-INTERNAL dot output and
+    # the tuple/GTE/parameter/constant/while plumbing add nothing.
+    assert s.bytes_out == 3 * (4 + 4 * OUT_BYTES)
+
+
+def test_crlf_and_tab_dumps_parse_identically():
+    crlf = GOLDEN.replace("\n", "\r\n")
+    tabbed = "\n".join(
+        ("\t" + ln.lstrip() if ln[:1].isspace() else ln)
+        for ln in GOLDEN.splitlines())
+    base = H.analyze(GOLDEN)
+    for variant in (crlf, tabbed):
+        s = H.analyze(variant)
+        assert s.dot_flops == base.dot_flops
+        assert s.coll_bytes == base.coll_bytes
+        assert s.trip_counts == base.trip_counts
+
+
+def test_input_output_alias_parsing():
+    aliases = H.parse_input_output_aliases(GOLDEN)
+    assert aliases == [{"output_index": [0], "param_number": 0,
+                        "param_index": [], "kind": "may-alias"}]
+    assert H.parse_input_output_aliases("HloModule nothing") == []
+    multi = ("HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+             "{1}: (2, {0}, must-alias) }")
+    got = H.parse_input_output_aliases(multi)
+    assert len(got) == 2
+    assert got[1] == {"output_index": [1], "param_number": 2,
+                      "param_index": [0], "kind": "must-alias"}
+
+
+def test_attribution_rows_localize_the_loop_body():
+    rows = H.attribution(GOLDEN)
+    by_name = {name: (b, f, c, m) for b, f, c, m, name in rows}
+    assert "body" in by_name
+    b, f, c, m = by_name["body"]
+    assert m == 3                      # trip-count multiplicity
+    assert f == 3 * 2 * 128 * 16       # the fusion's dot attributed here
+    assert c == 3 * 3 * OUT_BYTES
+    # entry holds no flops of its own
+    eb, ef, ec, em = by_name["main"]
+    assert ef == 0 and em == 1
