@@ -1,11 +1,12 @@
 """Static analysis & trace contracts for the jitted hot paths.
 
-Four tools, one package:
+Seven tools, one package:
 
 * :mod:`repro.analysis.lint` - a dependency-free AST linter with the
-  repo-specific REPRO001-006 rules (host syncs in hot loops, wall-clock
+  repo-specific REPRO001-007 rules (host syncs in hot loops, wall-clock
   timing around async dispatch, silent fallback branches, ``np.`` inside
-  kernel bodies, unhashable jit static args, zipped tree leaves).
+  kernel bodies, unhashable jit static args, zipped tree leaves,
+  clobbered XLA_FLAGS).
 * :mod:`repro.analysis.jaxpr_audit` - walks the ClosedJaxpr of a jit
   surface and extracts the primitive histogram, host-callback sites,
   dtype-promotion violations, per-site collective counts (via the
@@ -17,10 +18,23 @@ Four tools, one package:
 * :mod:`repro.analysis.recompile` - a recompile sentinel hashing abstract
   avals + static args per surface, asserting at-most-N distinct compiles
   per process (``analysis.recompiles`` obs gauge).
+* :mod:`repro.analysis.memplan` - a jaxpr buffer-liveness walk computing
+  per-surface peak live HBM bytes and per-pallas_call VMEM footprints
+  without compiling, cross-checkable against ``memory_analysis()``, plus
+  the SearchState fit table answering at what layer-group size O(sqrt N)
+  calibration streaming becomes mandatory.
+* :mod:`repro.analysis.shardcheck` - a partition-spec consistency checker
+  proving every compressed leaf's K-shard layout divides its mesh axes
+  and every shard_map body psum reduces exactly the sharded axes, with
+  replicated fallbacks surfaced as structured findings.
+* :mod:`repro.analysis.zoo` - the whole-zoo abstract dry-run: the
+  calibrate -> bank -> sparsify -> engine-decode -> fleet pipeline traced
+  or smoke-run for all ten config families, pinned by golden contracts
+  under ``results/contracts/zoo/``; also hosts the production AOT
+  lower/compile loop ``launch/dryrun.py`` shims to.
 
 ``python -m repro.analysis`` is the CLI: ``lint`` / ``audit`` /
-``contracts`` / ``hlo`` (the per-computation HLO attribution that used to
-live in ``benchmarks/hlo_debug.py``).
+``contracts`` / ``hlo`` / ``zoo`` / ``memplan`` / ``shardcheck``.
 
 This module imports neither jax nor numpy; submodules that need jax
 import it themselves, so the linter stays runnable in a bare interpreter

@@ -6,6 +6,14 @@
   python -m repro.analysis contracts --arch llama3.2-1b \
       --devices 4 --mesh 2x2 [--update] [--diff-out d.json]
   python -m repro.analysis hlo results/dryrun/tag.hlo.gz # dump attribution
+  python -m repro.analysis zoo [--devices 4 --mesh 2x2] \
+      [--arch f ...] [--update] [--diff-out d.json]      # whole-zoo dry-run
+  python -m repro.analysis zoo --cells --devices 512 \
+      --all --out results/dryrun                         # production AOT loop
+  python -m repro.analysis memplan --arch llama3.2-1b \
+      [--compile] [--fit]                                # memory planner
+  python -m repro.analysis shardcheck --arch llama3.2-1b \
+      --devices 4 --mesh 2x2                             # sharding checker
 
 ``--devices N`` forces N host devices; it MUST be consumed before jax is
 imported (XLA fixes the device count at import), which is why this module
@@ -134,6 +142,99 @@ def _cmd_hlo(rest: list[str]) -> int:
     return 0
 
 
+def _cmd_zoo(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis zoo")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default all ten families")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM (needs --devices DxM's product) or 'none'; "
+                         "default none (single device)")
+    ap.add_argument("--dir", default="results/contracts/zoo")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate goldens instead of checking")
+    ap.add_argument("--diff-out", default=None,
+                    help="write the structured diff JSON here on failure")
+    ap.add_argument("--cells", action="store_true",
+                    help="run the production AOT lower/compile loop "
+                         "(formerly launch/dryrun.py) instead of the "
+                         "abstract dry-run")
+    ap.add_argument("--cell", default=None, help="--cells: shape cell name")
+    ap.add_argument("--all", action="store_true",
+                    help="--cells: every (arch x cell)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--bf16-cast", action="store_true")
+    ap.add_argument("--out", default="results/dryrun",
+                    help="--cells: output directory")
+    a = ap.parse_args(rest)
+    from repro.analysis import zoo
+    if a.cells:
+        a.arch = a.arch[0] if a.arch else None
+        return zoo.run_cells_main(a)
+    return zoo.run_zoo(a.arch, mesh_shape=_parse_mesh(a.mesh),
+                       zoo_dir=a.dir, update=a.update, diff_out=a.diff_out)
+
+
+def _cmd_memplan(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis memplan")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--fit", action="store_true",
+                    help="print the whole-zoo SearchState fit table "
+                         "(full configs) instead of one arch's surfaces")
+    ap.add_argument("--full", action="store_true",
+                    help="--fit on full (non-smoke) configs")
+    ap.add_argument("--compile", action="store_true",
+                    help="also compile and report static-vs-compiled drift")
+    ap.add_argument("--budget-gb", type=float, default=16.0)
+    a = ap.parse_args(rest)
+    from repro.analysis import memplan, surfaces
+    if a.fit:
+        rows = memplan.fit_table(smoke=not a.full, budget_gb=a.budget_gb)
+        print(memplan.format_fit_table(rows))
+        return 0
+    for s in surfaces.serve_surfaces(a.arch, mesh_shape=None, sparse=False):
+        if a.compile:
+            res = memplan.crosscheck(s.fn, *s.args, surface=s.name,
+                                     donate_argnums=s.donate_argnums)
+            print(f"{s.name}: static={res['static']} "
+                  f"compiled={res['compiled']} rel_err={res['rel_err']:+.3f}"
+                  f" bf16_staging={res['bf16_staging_bytes']}")
+        else:
+            plan = memplan.plan_fn(s.fn, *s.args, surface=s.name,
+                                   donate_argnums=s.donate_argnums)
+            d = plan.to_dict()
+            print(json.dumps(d, indent=1, sort_keys=True))
+    sp = memplan.search_plan(a.arch, smoke=True, budget_gb=a.budget_gb)
+    print(f"search_state_bytes={sp['state_bytes']}")
+    return 0
+
+
+def _cmd_shardcheck(rest: list[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="repro.analysis shardcheck")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default llama3.2-1b")
+    ap.add_argument("--mesh", default="2x2", help="DxM or 'none'")
+    ap.add_argument("--json", dest="out", default=None)
+    a = ap.parse_args(rest)
+    from repro.analysis import shardcheck
+    mesh = _parse_mesh(a.mesh)
+    rc = 0
+    reports = []
+    for arch in (a.arch or ["llama3.2-1b"]):
+        rep = shardcheck.check_arch(arch, mesh_shape=mesh)
+        reports.append(rep)
+        print(shardcheck.format_report(rep))
+        if not rep["clean"]:
+            rc = 1
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(reports, f, indent=1)
+    return rc
+
+
 def main(argv: list[str] | None = None) -> int:
     argv = _force_devices(list(sys.argv[1:] if argv is None else argv))
     if not argv or argv[0] in ("-h", "--help"):
@@ -149,6 +250,12 @@ def main(argv: list[str] | None = None) -> int:
         return _cmd_contracts(rest)
     if cmd == "hlo":
         return _cmd_hlo(rest)
+    if cmd == "zoo":
+        return _cmd_zoo(rest)
+    if cmd == "memplan":
+        return _cmd_memplan(rest)
+    if cmd == "shardcheck":
+        return _cmd_shardcheck(rest)
     print(f"unknown subcommand {cmd!r}\n{_USAGE}", file=sys.stderr)
     return 2
 

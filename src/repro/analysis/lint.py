@@ -27,6 +27,11 @@ REPRO006  zipped tree leaves - ``zip(jax.tree.leaves(a),
           jax.tree.leaves(b))`` without ``strict=True`` silently
           truncates on structural divergence; use ``jax.tree.map`` or
           ``zip(..., strict=True)`` (the PR 5 misalignment class).
+REPRO007  clobbered XLA_FLAGS - ``os.environ["XLA_FLAGS"] = ...`` with a
+          value that never reads the existing variable drops every flag
+          the user set before launch (the ``launch/dryrun.py``
+          device-count forcing bug); fold the old value in
+          (``os.environ.get("XLA_FLAGS", "") + " --new-flag"``).
 
 Suppression: ``# noqa`` or ``# noqa: REPRO001[,REPRO006]`` on the
 offending line.  The linter is dependency-free (stdlib ``ast`` only) so
@@ -48,6 +53,7 @@ RULES = {
     "REPRO004": "host numpy inside a kernels/ compute body",
     "REPRO005": "unhashable literal passed as a jit static arg",
     "REPRO006": "zip over tree leaves without strict=True",
+    "REPRO007": "XLA_FLAGS assignment clobbers the user's existing flags",
 }
 
 _JIT_NAMES = {"jax.jit", "jax.pjit", "pjit.pjit"}
@@ -450,6 +456,36 @@ class _FunctionLinter:
                    "inline comment")
 
 
+def _reads_existing_env(value: ast.AST) -> bool:
+    """Does the assigned value fold in the current environment (any
+    ``os.environ`` read or ``os.getenv`` call)?"""
+    for n in ast.walk(value):
+        if isinstance(n, (ast.Attribute, ast.Name)) and \
+                _dotted(n) == "os.environ":
+            return True
+        if isinstance(n, ast.Call) and _dotted(n.func) == "os.getenv":
+            return True
+    return False
+
+
+def _check_env_clobber(tree: ast.AST, linter: _FunctionLinter) -> None:
+    """REPRO007, module-wide: the offending assignments typically sit at
+    module top level (pre-jax-import), outside every function scope."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if (isinstance(t, ast.Subscript)
+                    and _dotted(t.value) == "os.environ"
+                    and isinstance(t.slice, ast.Constant)
+                    and t.slice.value == "XLA_FLAGS"
+                    and not _reads_existing_env(node.value)):
+                linter._emit(node, "REPRO007",
+                             'assignment to os.environ["XLA_FLAGS"] drops '
+                             "any flags already set; append to "
+                             'os.environ.get("XLA_FLAGS", "") instead')
+
+
 def lint_source(src: str, path: str = "<string>") -> list[Finding]:
     """Lint one python source string; returns findings sorted by line."""
     try:
@@ -469,6 +505,7 @@ def lint_source(src: str, path: str = "<string>") -> list[Finding]:
             for sub in node.body:
                 if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
                     linter.run(sub, traced=False)
+    _check_env_clobber(tree, linter)
     linter.findings.sort(key=lambda f: (f.line, f.col, f.rule))
     return linter.findings
 
@@ -491,7 +528,7 @@ def main(argv: list[str] | None = None) -> int:
     import argparse
     ap = argparse.ArgumentParser(
         prog="repro.analysis.lint",
-        description="repo-native jax hot-path linter (REPRO001-006)")
+        description="repo-native jax hot-path linter (REPRO001-007)")
     ap.add_argument("paths", nargs="*", help="files or directories")
     ap.add_argument("--rules", help="comma-separated rule ids to enable")
     ap.add_argument("--list-rules", action="store_true")

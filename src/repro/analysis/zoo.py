@@ -1,0 +1,564 @@
+"""Whole-zoo abstract dry-run: calibrate -> bank -> sparsify -> decode -> fleet.
+
+One static pass per config family proving the full UniPruning pipeline is
+*feasible* before any mesh-hour burns: every stage either traces/evaluates
+abstractly (``eval_shape`` / ``jax.make_jaxpr``, zero FLOPs at scale) or
+runs at smoke scale where packing needs real values (mask thresholding,
+2:4 compression - seconds on CPU).  The per-family facts that are pinned
+by OUR code (prunable leaf counts, kernel layouts, compression ratio,
+collectives per site, static memory totals, shardcheck findings) land in
+golden contracts under ``results/contracts/zoo/`` that CI diffs; volatile
+facts (jax version, backend) stay under ``info`` and are ignored.
+
+Stages per family:
+
+* ``calibrate``  - ``eval_shape`` of the stats pass + the exact SearchState
+  byte layout (``memplan.search_state_bytes``, equal to the live
+  ``BENCH_calibrate.json`` figure);
+* ``bank``       - a MaskBank over magnitude scores re-thresholded at two
+  budgets (2:4 + 0.5 unstructured): the one-calibration-many-budgets
+  property, exercising the bounded mask cache;
+* ``sparsify``   - 2:4 compression through ``sparse.apply``: kernel-native
+  packed vs fallback leaf counts and the compressed-bytes ratio;
+* ``engine_decode`` - the serving jaxpr audited statically (collectives
+  per site, zero host callbacks) plus the static memory plan.
+  Encoder-decoder families (whisper) cannot use the slot engine
+  (``ServeEngine`` asserts decoder-only) - they emit a structured skip and
+  audit ``models.model.decode_step`` directly, which supports
+  encoder-decoder;
+* ``fleet``      - N budgets from ONE bank share the untouched leaves by
+  identity (``sparse.apply.shared_leaves``): the fleet memory invariant;
+* ``shardcheck`` - the partition-spec consistency report (mesh runs only).
+
+``python -m repro.analysis zoo [--update] [--arch f]`` checks/regenerates
+the goldens; ``--devices 4 --mesh 2x2`` is the CI mesh variant.
+
+The production AOT loop that used to live in ``launch/dryrun.py`` (lower +
+compile every (arch x shape-cell) on the 256/512-device mesh, collect
+``memory_analysis`` / collective traffic / fits-16GB) now lives here too
+(:func:`build_cell` / :func:`run_cell`) behind ``zoo --cells``;
+``launch/dryrun.py`` is a thin shim over it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPE_CELLS, ModelConfig,
+                                PruneConfig, ShapeCell, get_config,
+                                get_smoke_config)
+
+PyTree = Any
+
+__all__ = ["family_report", "build_zoo_manifest", "zoo_diff", "golden_path",
+           "run_zoo", "cell_skipped", "parse_collectives", "build_cell",
+           "run_cell", "run_cells_main", "LONG_OK"]
+
+# budgets every family's bank is re-thresholded at (stage: bank / fleet);
+# families whose kernels cannot take 2:4 (a reduction dim % 4 != 0) swap
+# the n:m budget for a second unstructured one
+_BUDGETS = ((2, 4), 0.5)
+_BUDGETS_UNSTRUCTURED = (0.25, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Per-family pipeline stages
+# ---------------------------------------------------------------------------
+
+def _surrogate_bank(cfg, params):
+    """In-memory MaskBank over magnitude scores: the static stand-in for a
+    calibrated bank (same tree structure, deterministic, no search)."""
+    from repro.core import metrics as metrics_mod
+    from repro.core.prunable import prunable_map
+    from repro.sparse.bank import MaskBank
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    V = jax.tree.map(lambda g: None if g is None else jnp.zeros_like(g),
+                     scores, is_leaf=lambda x: x is None)
+    return MaskBank(cfg, PruneConfig(mode="nm"), scores, V, None,
+                    {"surrogate": True})
+
+
+def _stage_calibrate(cfg, arch: str) -> dict:
+    from repro.analysis import memplan
+    from repro.data.synthetic import batches_for
+    from repro.models import model as M
+    shapes = M.param_shapes(cfg)
+    leaves = [x for x in jax.tree.leaves(shapes) if hasattr(x, "shape")]
+    param_bytes = sum(
+        int(jnp.dtype(x.dtype).itemsize) * int(jnp.prod(jnp.array(x.shape)))
+        if x.shape else int(jnp.dtype(x.dtype).itemsize) for x in leaves)
+    b = batches_for(cfg, n=1, batch=2, seq=16, split="calib")[0]
+    abstract_b = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), b)
+    stats = jax.eval_shape(lambda p, bb: M.stats_sumsq(cfg, p, bb),
+                           shapes, abstract_b)
+    n_stats = len([x for x in jax.tree.leaves(
+        stats, is_leaf=lambda x: x is None) if x is not None])
+    return {"status": "ok", "param_leaves": len(leaves),
+            "param_bytes": int(param_bytes), "stats_leaves": n_stats,
+            "search_state_bytes": memplan.search_state_bytes(arch)}
+
+
+def _nm_infeasible(scores) -> str | None:
+    """First prunable leaf whose reduction dim breaks 2:4 grouping, if any
+    (e.g. xlstm's ff_down K=85): n:m masks cannot exist for the family."""
+    from jax.tree_util import keystr, tree_flatten_with_path
+    flat, _ = tree_flatten_with_path(scores, is_leaf=lambda x: x is None)
+    for kp, leaf in flat:
+        if leaf is not None and leaf.shape[-2] % 4:
+            return f"{keystr(kp)} K={leaf.shape[-2]} % 4 != 0"
+    return None
+
+
+def _stage_bank(bank, budgets) -> dict:
+    for budget in budgets:
+        if isinstance(budget, tuple):
+            bank.masks_at(nm=budget)
+        else:
+            bank.masks_at(sparsity=budget)
+    n_prunable = len([x for x in jax.tree.leaves(
+        bank.Gamma, is_leaf=lambda x: x is None) if x is not None])
+    return {"status": "ok", "budgets": len(budgets),
+            "prunable_leaves": n_prunable,
+            "mask_cache_entries": len(bank._mask_cache)}
+
+
+def _stage_sparsify(cfg, params, bank) -> tuple[dict, PyTree]:
+    from repro.models import model as M
+    from repro.sparse import apply as apply_mod
+    masks = bank.masks_at(nm=_BUDGETS[0])
+    sparse = apply_mod.sparsify_params(
+        params, masks, axes=M.param_axes(cfg), idx_bits=2,
+        dtype=jnp.bfloat16)
+    rep = apply_mod.compressed_report(sparse, masks)
+    return ({"status": "ok",
+             "sparse_leaves": len(rep["layers"]),
+             "kernel_native_packed": rep["kernel_native_packed"],
+             "fallback_leaves": rep["fallback_leaves"],
+             "bytes_compressed": rep["bytes_compressed"],
+             "bytes_dense_bf16": rep["bytes_dense_bf16"],
+             "ratio": round(rep["ratio"], 6) if rep["ratio"] else None},
+            sparse)
+
+
+def _stage_engine_decode(cfg, arch: str, sparse,
+                         mesh_shape: tuple | None, *,
+                         sparse_serve: bool = True) -> dict:
+    from repro.analysis import jaxpr_audit, memplan, surfaces
+    from repro.models import model as M
+    if cfg.is_encoder_decoder:
+        # ServeEngine asserts decoder-only; decode_step itself supports
+        # encoder-decoder, so the serving jaxpr is audited directly.
+        if sparse is None:  # nm-infeasible family: audit the dense path
+            sparse = M.init_params(cfg, jax.random.key(0))
+        caches = M.init_caches(cfg, 1, 32, enc_len=8)
+        tok = jnp.zeros((1,), jnp.int32)
+        closed = jax.make_jaxpr(partial(M.decode_step, cfg))(
+            sparse, tok, caches, jnp.int32(0))
+        rep = jaxpr_audit.audit_jaxpr(closed, surface="decode_step")
+        plan = memplan.plan_jaxpr(closed, surface="decode_step")
+        return {"status": "skip",
+                "reason": "encoder-decoder: slot engine unsupported; "
+                          "decode_step audited directly",
+                "surface": "decode_step",
+                "host_callbacks": len(rep.host_callbacks),
+                "psums_by_site": dict(sorted(rep.psums_by_site.items())),
+                "arg_bytes": rep.arg_bytes, "out_bytes": rep.out_bytes,
+                "static_total_bytes": plan.total_bytes,
+                "pallas_calls": len(plan.pallas),
+                "fits_16gb": bool(plan.per_device(
+                    _n_devices(mesh_shape)) < 16e9)}
+    surf = surfaces.serve_surfaces(arch, mesh_shape=mesh_shape,
+                                   sparse=sparse_serve)[0]
+    closed = jax.make_jaxpr(surf.fn)(*surf.args)
+    rep = jaxpr_audit.audit_jaxpr(closed, surface=surf.name)
+    plan = memplan.plan_jaxpr(closed, surface=surf.name)
+    return {"status": "ok", "surface": surf.name, "sparse": sparse_serve,
+            "host_callbacks": len(rep.host_callbacks),
+            "psums_by_site": dict(sorted(rep.psums_by_site.items())),
+            "collectives": dict(sorted(rep.collectives.items())),
+            "arg_bytes": rep.arg_bytes, "out_bytes": rep.out_bytes,
+            "static_total_bytes": plan.total_bytes,
+            "pallas_calls": len(plan.pallas),
+            "fits_16gb": bool(plan.per_device(
+                _n_devices(mesh_shape)) < 16e9)}
+
+
+def _stage_fleet(cfg, params, bank) -> dict:
+    from repro.core import masks as masks_mod
+    from repro.sparse import apply as apply_mod
+    masks = bank.masks_at(sparsity=0.5)
+    variant = masks_mod.apply_masks(params, masks)
+    shared = apply_mod.shared_leaves(params, variant)
+    total = len(jax.tree.leaves(params))
+    return {"status": "ok", "shared_leaves": shared,
+            "total_leaves": total,
+            "mask_cache_entries": len(bank._mask_cache)}
+
+
+def _n_devices(mesh_shape: tuple | None) -> int:
+    if not mesh_shape:
+        return 1
+    n = 1
+    for d in mesh_shape:
+        n *= d
+    return n
+
+
+def family_report(arch: str, *, mesh_shape: tuple | None = None) -> dict:
+    """The full static pipeline dry-run for one config family."""
+    from repro.analysis import shardcheck
+    from repro.models import model as M
+    cfg = get_smoke_config(arch)
+    report: dict[str, Any] = {
+        "family": arch, "model_family": cfg.family,
+        "mesh": list(mesh_shape) if mesh_shape else None, "stages": {}}
+    stages = report["stages"]
+    stages["calibrate"] = _stage_calibrate(cfg, arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    bank = _surrogate_bank(cfg, params)
+    nm_block = _nm_infeasible(bank.Gamma)
+    budgets = _BUDGETS_UNSTRUCTURED if nm_block else _BUDGETS
+    stages["bank"] = _stage_bank(bank, budgets)
+    if nm_block:
+        # no 2:4 layout exists for the family: serve masked-dense instead
+        stages["sparsify"] = {
+            "status": "skip",
+            "reason": f"2:4 infeasible ({nm_block}); serving masked-dense"}
+        sparse = None
+    else:
+        stages["sparsify"], sparse = _stage_sparsify(cfg, params, bank)
+    stages["engine_decode"] = _stage_engine_decode(
+        cfg, arch, sparse, mesh_shape, sparse_serve=not nm_block)
+    stages["fleet"] = _stage_fleet(cfg, params, bank)
+    if mesh_shape is None:
+        stages["shardcheck"] = {
+            "status": "skip", "reason": "single device: nothing partitioned"}
+    else:
+        sc = shardcheck.check_arch(arch, mesh_shape=mesh_shape,
+                                   trace_decode=not cfg.is_encoder_decoder,
+                                   sparse=not nm_block)
+        kinds: dict[str, int] = {}
+        for f in sc.get("findings", []):
+            kinds[f["kind"]] = kinds.get(f["kind"], 0) + 1
+        stages["shardcheck"] = {"status": "ok", "clean": sc["clean"],
+                                "findings": dict(sorted(kinds.items())),
+                                "leaves": sc.get("leaves", {})}
+    report["feasibility"] = {
+        "traces": all(s.get("status") in ("ok", "skip")
+                      for s in stages.values()),
+        "fits_16gb": bool(stages["engine_decode"].get("fits_16gb", False)),
+        "sharding_clean": (stages["shardcheck"].get("clean", True)
+                           if stages["shardcheck"]["status"] == "ok"
+                           else None),
+    }
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Golden contracts
+# ---------------------------------------------------------------------------
+
+def build_zoo_manifest(arch: str, *, mesh_shape: tuple | None = None) -> dict:
+    man = family_report(arch, mesh_shape=mesh_shape)
+    man["info"] = {"jax": jax.__version__,
+                   "backend": jax.default_backend()}
+    return man
+
+
+def _strip_info(d):
+    if isinstance(d, dict):
+        return {k: _strip_info(v) for k, v in d.items() if k != "info"}
+    if isinstance(d, list):
+        return [_strip_info(x) for x in d]
+    return d
+
+
+def zoo_diff(golden: dict, current: dict) -> list[dict]:
+    """Structured drift, path-by-path, ``info`` subtrees ignored."""
+    diffs: list[dict] = []
+
+    def walk(g, c, path):
+        if isinstance(g, dict) and isinstance(c, dict):
+            for k in sorted(set(g) | set(c)):
+                if k == "info":
+                    continue
+                if k not in c:
+                    diffs.append({"path": f"{path}.{k}", "golden": g[k],
+                                  "current": "<missing>"})
+                elif k not in g:
+                    diffs.append({"path": f"{path}.{k}",
+                                  "golden": "<missing>", "current": c[k]})
+                else:
+                    walk(g[k], c[k], f"{path}.{k}")
+        elif _strip_info(g) != _strip_info(c):
+            diffs.append({"path": path, "golden": g, "current": c})
+
+    walk(golden, current, current.get("family", "?"))
+    return diffs
+
+
+def golden_path(zoo_dir, arch: str, mesh_shape: tuple | None) -> pathlib.Path:
+    tag = "x".join(str(d) for d in mesh_shape) if mesh_shape else "1dev"
+    return pathlib.Path(zoo_dir) / f"{arch}_{tag}.json"
+
+
+def run_zoo(archs=None, *, mesh_shape: tuple | None = None,
+            zoo_dir="results/contracts/zoo", update: bool = False,
+            diff_out=None) -> int:
+    """Check (or ``update``) every family's golden; 0 iff no drift."""
+    import sys
+    rc = 0
+    all_diffs = []
+    for arch in (archs or ARCH_IDS):
+        man = build_zoo_manifest(arch, mesh_shape=mesh_shape)
+        path = golden_path(zoo_dir, arch, mesh_shape)
+        if update:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(man, indent=1, sort_keys=True) + "\n")
+            print(f"wrote {path}")
+            continue
+        if not path.exists():
+            rc = 1
+            all_diffs.append({"path": str(path), "golden": "<missing file>",
+                              "current": "built"})
+            print(f"{path}: MISSING GOLDEN", file=sys.stderr)
+            continue
+        diffs = zoo_diff(json.loads(path.read_text()), man)
+        feas = man["feasibility"]
+        if diffs:
+            rc = 1
+            all_diffs.extend(diffs)
+            print(f"{path}: ZOO CONTRACT DRIFT", file=sys.stderr)
+            for d in diffs:
+                print(f"  {d['path']}: golden={d['golden']!r} "
+                      f"current={d['current']!r}", file=sys.stderr)
+        else:
+            print(f"{path}: OK (traces={feas['traces']} "
+                  f"fits_16gb={feas['fits_16gb']} "
+                  f"sharding_clean={feas['sharding_clean']})")
+    if all_diffs and diff_out:
+        pathlib.Path(diff_out).write_text(json.dumps(all_diffs, indent=1))
+        print(f"diff written to {diff_out}", file=sys.stderr)
+    return rc
+
+
+# ---------------------------------------------------------------------------
+# Production shape-cell AOT loop (moved here from launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+# long_500k requires sub-quadratic service; skipped for pure full-attention
+# archs (see DESIGN.md section 6)
+LONG_OK = {"zamba2-7b", "xlstm-125m", "gemma2-2b", "gemma3-1b"}
+
+COLLECTIVE_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^ ]* (all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def cell_skipped(cfg: ModelConfig, cell: ShapeCell) -> str | None:
+    if cell.name == "long_500k" and cfg.name not in LONG_OK:
+        return "full-attention arch: 500k dense-KV decode not serviceable"
+    return None
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum per-device collective bytes from partitioned optimized HLO."""
+    out: dict[str, float] = {}
+    details = []
+    for line in hlo.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        size = n * DTYPE_BYTES.get(dt, 4)
+        g = GROUPS_RE.search(line)
+        group_size = int(g.group(2)) if g else 0
+        if op == "all-reduce":
+            traffic = 2 * size  # ring: reduce-scatter + all-gather
+        elif op == "reduce-scatter":
+            traffic = size * max(group_size, 1)
+        else:
+            traffic = size
+        out[op] = out.get(op, 0.0) + traffic
+        details.append({"op": op, "bytes": size, "group_size": group_size})
+    out["total_bytes"] = sum(v for k, v in out.items() if k != "total_bytes")
+    out["ops"] = details[:512]
+    return out
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, pcfg=None,
+               accum_override: int = 0, cast_bf16: bool = False):
+    """Returns (fn, arg_specs, in_shardings, rules, extra) for the cell."""
+    from repro.dist import sharding as shd
+    from repro.launch import steps as steps_mod
+    from repro.models import model as M
+    from repro.optim import optimizers as opt
+    kv_mode = "all" if cell.name == "long_500k" else (
+        "model" if cell.is_serve else False)
+    rules = shd.make_production_rules(
+        mesh, seq_shard_kv=kv_mode, seq_parallel=cell.kind == "train")
+    params_s = M.param_shapes(cfg)
+    if cell.is_serve:  # deployment: bf16 weights
+        params_s = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            params_s)
+    axes = M.param_axes(cfg)
+    p_sh = shd.params_sharding(axes, params_s, rules)
+    if cell.is_serve:
+        # serving layout: embedding table vocab-TP only (no FSDP dim) so the
+        # tied unembed matmul shards cleanly instead of replicating
+        p_sh["embed"]["table"] = NamedSharding(mesh, P("model", None))
+    specs = steps_mod.input_specs(cfg, cell)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+
+    if cell.kind == "train":
+        accum = accum_override or steps_mod.choose_accum(cfg, cell, dp)
+        ocfg = opt.AdamWConfig()
+        fn = steps_mod.make_train_step(cfg, ocfg, accum=accum, remat=True,
+                                       cast_bf16=cast_bf16)
+        ostate_s = jax.eval_shape(opt.adamw_init, params_s)
+        o_sh = jax.tree.map(lambda _: None, ostate_s)
+        o_sh = opt.AdamWState(mu=p_sh, nu=p_sh,
+                              count=NamedSharding(mesh, P()))
+        b_sh = shd.batch_sharding_tree(specs["batch"], mesh)
+        return (fn, (params_s, ostate_s, specs["batch"]),
+                (p_sh, o_sh, b_sh), rules, {"accum": accum, "donate": (0, 1)})
+    if cell.kind == "prefill":
+        fn = steps_mod.make_prefill(cfg, cell)
+        b_sh = shd.batch_sharding_tree(specs["batch"], mesh)
+        return fn, (params_s, specs["batch"]), (p_sh, b_sh), rules, {}
+    # decode: partial-softmax attention over sharded KV (seq or model axis)
+    fn = steps_mod.make_decode(cfg, cell, seq_sharded=True)
+    c_sh = shd.cache_sharding(specs["caches"], mesh)
+    tok_sh = (NamedSharding(mesh, P(("pod", "data")
+                                    if "pod" in mesh.axis_names else "data"))
+              if cell.global_batch % dp == 0
+              else NamedSharding(mesh, P(None)))
+    return (fn, (params_s, specs["token"], specs["caches"], specs["t"]),
+            (p_sh, tok_sh, c_sh, NamedSharding(mesh, P())), rules,
+            {"donate": (2,)})
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
+             hlo_path=None, accum_override: int = 0,
+             cast_bf16: bool = False) -> dict:
+    from repro.dist.axes import use_rules
+    from repro.launch.mesh import make_production_mesh
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    rec: dict = {"arch": arch, "cell": cell_name, "multi_pod": multi_pod,
+                 "mesh": "(2,16,16)" if multi_pod else "(16,16)"}
+    skip = cell_skipped(cfg, cell)
+    if skip:
+        rec["skipped"] = skip
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    t0 = time.time()
+    fn, arg_specs, in_sh, rules, extra = build_cell(
+        cfg, cell, mesh, accum_override=accum_override, cast_bf16=cast_bf16)
+    donate = extra.pop("donate", ())
+    rec.update(extra)
+    with mesh, use_rules(rules):
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):  # jax<=0.4.x wraps the properties dict
+            ca = ca[0] if ca else {}
+        print({k: v for k, v in (ca or {}).items()
+               if not k.startswith(("bytes accessed0", "bytes accessed1",
+                                    "utilization"))})
+        hlo = compiled.as_text()
+    if hlo_path is not None:
+        import gzip
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+    rec.update({
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+        },
+        "cost": {k: v for k, v in (ca or {}).items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "collectives": parse_collectives(hlo),
+        "hlo_bytes": len(hlo),
+    })
+    per_dev = (rec["memory"]["argument_bytes"] - rec["memory"]["alias_bytes"]
+               + rec["memory"]["temp_bytes"] + rec["memory"]["output_bytes"])
+    rec["fits_16gb"] = bool(per_dev < 16e9)
+    rec["per_device_hbm_bytes"] = per_dev
+    return rec
+
+
+def run_cells_main(args) -> int:
+    """The old dryrun driver: every requested (arch x cell), JSON per cell.
+
+    ``args`` carries arch/cell/all/multi_pod/accum/bf16_cast/out (the shim
+    in ``launch/dryrun.py`` and ``zoo --cells`` both parse into this shape).
+    """
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    jobs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for c in SHAPE_CELLS:
+                jobs.append((a, c))
+    else:
+        assert args.arch and args.cell, "--arch/--cell or --all"
+        jobs.append((args.arch, args.cell))
+
+    for arch, cell in jobs:
+        tag = f"{arch}__{cell}__{'multipod' if args.multi_pod else 'pod'}"
+        print(f"=== {tag} ===", flush=True)
+        try:
+            rec = run_cell(arch, cell, multi_pod=args.multi_pod,
+                           hlo_path=outdir / f"{tag}.hlo.gz",
+                           accum_override=args.accum,
+                           cast_bf16=args.bf16_cast)
+        except Exception as e:  # a failure here is a bug in our sharding
+            rec = {"arch": arch, "cell": cell, "multi_pod": args.multi_pod,
+                   "error": f"{type(e).__name__}: {e}"}
+            print("FAILED:", rec["error"], flush=True)
+        (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+        ok = "SKIP" if rec.get("skipped") else (
+            "ERROR" if rec.get("error") else "ok")
+        print(f"--- {tag}: {ok} "
+              f"compile={rec.get('compile_s', '-')}s "
+              f"hbm/dev={rec.get('per_device_hbm_bytes', 0)/1e9:.2f}GB",
+              flush=True)
+    return 0

@@ -1,204 +1,33 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+_FORCE = "--xla_force_host_platform_device_count=512"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    # append, never assign: a bare assignment would clobber user-set flags
+    # (lint rule REPRO007 guards this pattern repo-wide)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE).strip()
 
-# NOTE: the two lines above MUST run before any other import (jax locks the
+# NOTE: the lines above MUST run before any other import (jax locks the
 # device count on first init), which is why the docstring sits below them and
 # no `from __future__` import is used in this file.
-_DOC = """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+_DOC = """Multi-pod dry-run launcher: thin shim over ``repro.analysis.zoo``.
 
-Proves the distribution config is coherent without hardware:
-  * jax.jit(step).lower(**ShapeDtypeStructs).compile() must succeed,
-  * memory_analysis() shows the per-device footprint fits a v5e (16 GB),
-  * cost_analysis() + the partitioned HLO's collective ops feed the roofline
-    (benchmarks/roofline.py).
+The AOT lower/compile loop (every (arch x shape x mesh) cell, per-device
+memory_analysis, collective traffic, fits-16GB) lives in
+``repro.analysis.zoo`` (:func:`repro.analysis.zoo.run_cell`) so the static
+auditor and this launcher share one implementation.  This module only owns
+the pre-jax-import device forcing and the CLI:
 
-Usage:
   python -m repro.launch.dryrun --arch yi-6b --cell train_4k [--multi-pod]
   python -m repro.launch.dryrun --all [--multi-pod] --out results/dryrun
+
+Equivalent: ``python -m repro.analysis --devices 512 zoo --cells ...``.
 """
 
 import argparse
-import json
-import pathlib
-import re
-import time
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs.base import (ARCH_IDS, SHAPE_CELLS, ModelConfig,
-                                PruneConfig, ShapeCell, get_config)
-from repro.dist import sharding as shd
-from repro.dist.axes import use_rules
-from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh
-from repro.models import model as M
-from repro.optim import optimizers as opt
-
-# long_500k requires sub-quadratic service; skipped for pure full-attention
-# archs (see DESIGN.md section 6)
-LONG_OK = {"zamba2-7b", "xlstm-125m", "gemma2-2b", "gemma3-1b"}
-
-COLLECTIVE_RE = re.compile(
-    r"(\w+)\[([\d,]*)\][^ ]* (all-gather|all-reduce|reduce-scatter|"
-    r"all-to-all|collective-permute)\(")
-GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
-               "f8e5m2": 1, "s16": 2, "u16": 2}
-
-
-def cell_skipped(cfg: ModelConfig, cell: ShapeCell) -> str | None:
-    if cell.name == "long_500k" and cfg.name not in LONG_OK:
-        return "full-attention arch: 500k dense-KV decode not serviceable"
-    return None
-
-
-def parse_collectives(hlo: str) -> dict:
-    """Sum per-device collective bytes from partitioned optimized HLO."""
-    out: dict[str, float] = {}
-    details = []
-    for line in hlo.splitlines():
-        m = COLLECTIVE_RE.search(line)
-        if not m:
-            continue
-        dt, dims, op = m.groups()
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        size = n * DTYPE_BYTES.get(dt, 4)
-        g = GROUPS_RE.search(line)
-        group_size = int(g.group(2)) if g else 0
-        if op == "all-reduce":
-            traffic = 2 * size  # ring: reduce-scatter + all-gather
-        elif op == "reduce-scatter":
-            traffic = size * max(group_size, 1)
-        else:
-            traffic = size
-        out[op] = out.get(op, 0.0) + traffic
-        details.append({"op": op, "bytes": size, "group_size": group_size})
-    out["total_bytes"] = sum(v for k, v in out.items() if k != "total_bytes")
-    out["ops"] = details[:512]
-    return out
-
-
-def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh, pcfg=None,
-               accum_override: int = 0, cast_bf16: bool = False):
-    """Returns (fn, arg_specs, in_shardings, donate) for the cell."""
-    kv_mode = "all" if cell.name == "long_500k" else (
-        "model" if cell.is_serve else False)
-    rules = shd.make_production_rules(
-        mesh, seq_shard_kv=kv_mode, seq_parallel=cell.kind == "train")
-    params_s = M.param_shapes(cfg)
-    if cell.is_serve:  # deployment: bf16 weights
-        params_s = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(
-                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
-            params_s)
-    axes = M.param_axes(cfg)
-    p_sh = shd.params_sharding(axes, params_s, rules)
-    if cell.is_serve:
-        # serving layout: embedding table vocab-TP only (no FSDP dim) so the
-        # tied unembed matmul shards cleanly instead of replicating
-        p_sh["embed"]["table"] = NamedSharding(mesh, P("model", None))
-    specs = steps_mod.input_specs(cfg, cell)
-    dp = 1
-    for a in ("pod", "data"):
-        if a in mesh.axis_names:
-            dp *= mesh.shape[a]
-
-    if cell.kind == "train":
-        accum = accum_override or steps_mod.choose_accum(cfg, cell, dp)
-        ocfg = opt.AdamWConfig()
-        fn = steps_mod.make_train_step(cfg, ocfg, accum=accum, remat=True,
-                                       cast_bf16=cast_bf16)
-        ostate_s = jax.eval_shape(opt.adamw_init, params_s)
-        o_sh = jax.tree.map(lambda _: None, ostate_s)
-        o_sh = opt.AdamWState(mu=p_sh, nu=p_sh,
-                              count=NamedSharding(mesh, P()))
-        b_sh = shd.batch_sharding_tree(specs["batch"], mesh)
-        return (fn, (params_s, ostate_s, specs["batch"]),
-                (p_sh, o_sh, b_sh), rules, {"accum": accum, "donate": (0, 1)})
-    if cell.kind == "prefill":
-        fn = steps_mod.make_prefill(cfg, cell)
-        b_sh = shd.batch_sharding_tree(specs["batch"], mesh)
-        return fn, (params_s, specs["batch"]), (p_sh, b_sh), rules, {}
-    # decode: partial-softmax attention over sharded KV (seq or model axis)
-    fn = steps_mod.make_decode(cfg, cell, seq_sharded=True)
-    c_sh = shd.cache_sharding(specs["caches"], mesh)
-    tok_sh = (NamedSharding(mesh, P(("pod", "data")
-                                    if "pod" in mesh.axis_names else "data"))
-              if cell.global_batch % dp == 0
-              else NamedSharding(mesh, P(None)))
-    return (fn, (params_s, specs["token"], specs["caches"], specs["t"]),
-            (p_sh, tok_sh, c_sh, NamedSharding(mesh, P())), rules,
-            {"donate": (2,)})
-
-
-def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
-             hlo_path=None, accum_override: int = 0,
-             cast_bf16: bool = False) -> dict:
-    cfg = get_config(arch)
-    cell = SHAPE_CELLS[cell_name]
-    rec: dict = {"arch": arch, "cell": cell_name, "multi_pod": multi_pod,
-                 "mesh": "(2,16,16)" if multi_pod else "(16,16)"}
-    skip = cell_skipped(cfg, cell)
-    if skip:
-        rec["skipped"] = skip
-        return rec
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = 512 if multi_pod else 256
-    t0 = time.time()
-    fn, arg_specs, in_sh, rules, extra = build_cell(
-        cfg, cell, mesh, accum_override=accum_override, cast_bf16=cast_bf16)
-    donate = extra.pop("donate", ())
-    rec.update(extra)
-    with mesh, use_rules(rules):
-        lowered = jax.jit(fn, in_shardings=in_sh,
-                          donate_argnums=donate).lower(*arg_specs)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
-        ma = compiled.memory_analysis()
-        print(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
-        print({k: v for k, v in (ca or {}).items()
-               if not k.startswith(("bytes accessed0", "bytes accessed1",
-                                    "utilization"))})
-        hlo = compiled.as_text()
-    if hlo_path is not None:
-        import gzip
-        with gzip.open(hlo_path, "wt") as f:
-            f.write(hlo)
-    rec.update({
-        "devices": n_dev,
-        "lower_s": round(t_lower, 2),
-        "compile_s": round(t_compile, 2),
-        "memory": {
-            "argument_bytes": ma.argument_size_in_bytes,
-            "output_bytes": ma.output_size_in_bytes,
-            "temp_bytes": ma.temp_size_in_bytes,
-            "alias_bytes": ma.alias_size_in_bytes,
-            "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
-        },
-        "cost": {k: v for k, v in (ca or {}).items()
-                 if k in ("flops", "bytes accessed", "transcendentals")},
-        "collectives": parse_collectives(hlo),
-        "hlo_bytes": len(hlo),
-    })
-    per_dev = (rec["memory"]["argument_bytes"] - rec["memory"]["alias_bytes"]
-               + rec["memory"]["temp_bytes"] + rec["memory"]["output_bytes"])
-    rec["fits_16gb"] = bool(per_dev < 16e9)
-    rec["per_device_hbm_bytes"] = per_dev
-    return rec
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=_DOC)
     ap.add_argument("--arch", default=None)
     ap.add_argument("--cell", default=None)
     ap.add_argument("--all", action="store_true")
@@ -208,37 +37,8 @@ def main() -> None:
     ap.add_argument("--bf16-cast", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
-
-    outdir = pathlib.Path(args.out)
-    outdir.mkdir(parents=True, exist_ok=True)
-    jobs = []
-    if args.all:
-        for a in ARCH_IDS:
-            for c in SHAPE_CELLS:
-                jobs.append((a, c))
-    else:
-        assert args.arch and args.cell, "--arch/--cell or --all"
-        jobs.append((args.arch, args.cell))
-
-    for arch, cell in jobs:
-        tag = f"{arch}__{cell}__{'multipod' if args.multi_pod else 'pod'}"
-        print(f"=== {tag} ===", flush=True)
-        try:
-            rec = run_cell(arch, cell, multi_pod=args.multi_pod,
-                           hlo_path=outdir / f"{tag}.hlo.gz",
-                           accum_override=args.accum,
-                           cast_bf16=args.bf16_cast)
-        except Exception as e:  # a failure here is a bug in our sharding
-            rec = {"arch": arch, "cell": cell, "multi_pod": args.multi_pod,
-                   "error": f"{type(e).__name__}: {e}"}
-            print("FAILED:", rec["error"], flush=True)
-        (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
-        ok = "SKIP" if rec.get("skipped") else (
-            "ERROR" if rec.get("error") else "ok")
-        print(f"--- {tag}: {ok} "
-              f"compile={rec.get('compile_s', '-')}s "
-              f"hbm/dev={rec.get('per_device_hbm_bytes', 0)/1e9:.2f}GB",
-              flush=True)
+    from repro.analysis import zoo
+    raise SystemExit(zoo.run_cells_main(args))
 
 
 if __name__ == "__main__":

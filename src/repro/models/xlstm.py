@@ -20,6 +20,18 @@ from repro.models.common import Builder
 PyTree = Any
 
 
+def _pvary(x, axis_names):
+    """Device-varying marker for replicated operands under shard_map.
+
+    jax >= 0.6 requires an explicit ``pvary`` before mixing a replicated
+    operand into device-varying compute; 0.4.x has no such primitive and
+    its shard_map rep-checker handles replicated operands implicitly, so
+    the identity is the correct (and only) fallback there.
+    """
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_names) if fn is not None else x
+
+
 # ---------------------------------------------------------------------------
 # mLSTM
 # ---------------------------------------------------------------------------
@@ -256,7 +268,7 @@ def _slstm_fwd(gates_in, state_tuple, r, num_heads, axis_names):
     d = d4 // 4
     rf = r.astype(jnp.float32)
     if axis_names:  # shard_map: make R device-varying ONCE so its per-step
-        rf = jax.lax.pvary(rf, axis_names)  # cotangents stay local
+        rf = _pvary(rf, axis_names)  # cotangents stay local
     gates_seq = gates_in.astype(jnp.float32).transpose(1, 0, 2)
 
     def step(carry, g_t):
@@ -275,12 +287,12 @@ def _slstm_bwd(num_heads, axis_names, res, cots):
     d = d4 // 4
     rf = r.astype(jnp.float32)
     if axis_names:
-        rf = jax.lax.pvary(rf, axis_names)
+        rf = _pvary(rf, axis_names)
     dh_seq = dh_out.reshape(B, S, num_heads, d // num_heads) \
         .transpose(1, 0, 2, 3).astype(jnp.float32)
     dR0 = jnp.zeros(r.shape, jnp.float32)
     if axis_names:
-        dR0 = jax.lax.pvary(dR0, axis_names)
+        dR0 = _pvary(dR0, axis_names)
 
     def back(carry, xs):
         dstate, dR = carry

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
+from collections import OrderedDict
 from typing import Any, Iterable
 
 import jax
@@ -27,6 +28,13 @@ from repro.ckpt import checkpoint as ckpt
 from repro.configs.base import PruneConfig, get_config, get_smoke_config
 
 PyTree = Any
+
+# masks_at memoization bound: a full mask tree is ~half the prunable-weight
+# bytes, and the autoscale path mints budgets live - unbounded growth here
+# is an OOM on long-lived fleets.  8 covers every concurrently-served
+# budget seen in practice (fleet tests use <= 4); LRU eviction just means
+# a re-threshold on the next request for an evicted budget.
+MASK_CACHE_ENTRIES = 8
 
 SCHEMA = "unipruning.mask-bank/v1"
 # Artifact header version.  v1: no integrity fields (legacy, still loads).
@@ -85,8 +93,9 @@ class MaskBank:
         # fleet building one engine per budget - or repeated sparse_params
         # calls at the same budget - must threshold once per budget, not
         # once per caller.  Mask trees are immutable jax arrays: sharing the
-        # cached tree across callers is safe.
-        self._mask_cache: dict[tuple, PyTree] = {}
+        # cached tree across callers is safe.  Bounded LRU (recency =
+        # insertion + hit order), MASK_CACHE_ENTRIES deep.
+        self._mask_cache: OrderedDict[tuple, PyTree] = OrderedDict()
 
     # -- persistence ---------------------------------------------------------
 
@@ -183,15 +192,20 @@ class MaskBank:
                 "unstructured bank needs an explicit sparsity"
             key = ("nm", (int(pcfg.nm_n), int(pcfg.nm_m)))
         masks = self._mask_cache.get(key)
-        if masks is None:
-            sp = obs.span("bank.threshold", budget=str(key))
-            with sp:
-                masks = mirror.export_masks(
-                    pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
-                    V=self.V)
-                sp.fence(masks)
-            obs.inc("bank.threshold_passes")
-            self._mask_cache[key] = masks
+        if masks is not None:
+            self._mask_cache.move_to_end(key)
+            return masks
+        sp = obs.span("bank.threshold", budget=str(key))
+        with sp:
+            masks = mirror.export_masks(
+                pcfg, self.Gamma, 0.5 if sparsity is None else sparsity,
+                V=self.V)
+            sp.fence(masks)
+        obs.inc("bank.threshold_passes")
+        self._mask_cache[key] = masks
+        while len(self._mask_cache) > MASK_CACHE_ENTRIES:
+            self._mask_cache.popitem(last=False)
+        obs.set_gauge("analysis.mask_cache_entries", len(self._mask_cache))
         return masks
 
     def masks_grid(self, sparsities: Iterable[float]) -> dict[float, PyTree]:

@@ -183,6 +183,51 @@ def test_repro006_zip_tree_leaves():
     assert "REPRO006" not in _rules(strict)
 
 
+def test_repro007_xla_flags_clobber():
+    src = """
+        import os
+
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    """
+    assert "REPRO007" in _rules(src)
+    # appending to the user's existing flags is the sanctioned pattern
+    append = """
+        import os
+
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=8")
+    """
+    assert "REPRO007" not in _rules(append)
+    getenv = """
+        import os
+
+        os.environ["XLA_FLAGS"] = (os.getenv("XLA_FLAGS", "") + " --foo")
+    """
+    assert "REPRO007" not in _rules(getenv)
+    # other env vars are none of this rule's business
+    other = """
+        import os
+
+        os.environ["JAX_PLATFORMS"] = "cpu"
+    """
+    assert "REPRO007" not in _rules(other)
+    # the assignment usually sits at module scope (pre-jax-import); the
+    # rule must also catch it inside a function body
+    in_fn = """
+        import os
+
+        def force(n):
+            os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    """
+    assert "REPRO007" in _rules(in_fn)
+    suppressed = """
+        import os
+
+        os.environ["XLA_FLAGS"] = "--foo"  # noqa: REPRO007
+    """
+    assert _rules(suppressed) == []
+
+
 def test_noqa_suppression():
     src = """
         import jax

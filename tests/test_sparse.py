@@ -332,6 +332,40 @@ def test_bank_masks_at_memoizes_per_budget(calibrated, tmp_path,
     assert len(calls) == 3
 
 
+def test_bank_mask_cache_is_bounded_lru(calibrated, tmp_path, monkeypatch):
+    """The memo must not grow without bound across a budget sweep: with
+    the cap shrunk to 2 the least-recently-used budget evicts (a revisit
+    re-thresholds), a cache hit refreshes recency, and the
+    ``analysis.mask_cache_entries`` gauge tracks the live size."""
+    from repro.sparse import bank as bank_mod
+    from repro import obs
+    params, pcfg, stats, state = calibrated
+    d = tmp_path / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    bank = MaskBank.load(d)
+    monkeypatch.setattr(bank_mod, "MASK_CACHE_ENTRIES", 2)
+    calls = []
+    real = mirror.export_masks
+    monkeypatch.setattr(mirror, "export_masks",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    obs.configure(enabled=True)
+    try:
+        bank.masks_at(sparsity=0.5)       # cache: [0.5]
+        m6 = bank.masks_at(sparsity=0.6)  # cache: [0.5, 0.6]
+        assert len(calls) == 2
+        assert obs.gauge_value("analysis.mask_cache_entries") == 2.0
+        bank.masks_at(sparsity=0.5)       # hit: recency now [0.6, 0.5]
+        assert len(calls) == 2
+        bank.masks_at(sparsity=0.7)       # evicts 0.6, keeps refreshed 0.5
+        assert len(calls) == 3
+        assert obs.gauge_value("analysis.mask_cache_entries") == 2.0
+        assert bank.masks_at(sparsity=0.5) is not None and len(calls) == 3
+        assert bank.masks_at(sparsity=0.6) is not m6 and len(calls) == 4
+    finally:
+        obs.disable()
+
+
 def test_bank_saved_without_stats_loads_clean(calibrated, tmp_path):
     """The checksum must be structure-insensitive: load rebuilds the tree
     through the full params template, expanding a saved stats=None into a
