@@ -1,0 +1,147 @@
+"""Self-speculative decoding bench: sparse member drafts, dense verifies.
+
+Exercises the fleet's speculative path end-to-end on the smoke config:
+calibrate once into a mask bank, build a two-member fleet (dense 0.0
+verifier + unstructured-0.5 draft), and serve identical traffic three
+ways - dense-only pinned, draft-only pinned, and spec-routed - through
+the SAME engines and jit caches.  Tracked per PR as
+``results/bench/BENCH_spec.json`` and gated by ``benchmarks/run.py
+--smoke``:
+
+* spec tok/s >= 1.2x the dense-only baseline (the perf claim),
+* the spec stream BIT-IDENTICAL to the dense member decoding alone
+  (greedy speculative decoding is lossless),
+* acceptance rate / accepted-tokens-per-round from the fleet report.
+
+Config notes: the draft is the 0.5 masked-dense member, not 2:4 - on CPU
+the interpret-mode packed kernel makes the compressed member ~3x slower
+than dense, which buries the speculation win under kernel overhead; on
+TPU the compressed draft is the bandwidth story.  k is pinned high
+(k=k_max=64 = the whole generation): smoke-weight streams echo heavily so
+acceptance saturates, and one wide round per request amortizes the
+per-dispatch host overhead that CPU decode timing is dominated by.  ONE
+slot per member: speculation's classic win is low-batch latency, where
+each dense decode dispatch moves a single row and host overhead is the
+bottleneck; at high batch the draft scan and the dense loop cost the
+same compute and the margin washes out.  Engines and jitted entry points
+are built ONCE and reused across warmup and timed runs - fresh EngineFns
+per run would time jit compilation, not decoding.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.table8_inference import write_serve_json
+
+BUDGETS = ["0.0", "0.5"]
+SPEC = "draft:0.5,k:64,k_max:64"
+SLOTS, CAPACITY, GEN = 2, 128, 64  # 1 slot per member (low-batch latency)
+
+
+def spec_bench(out_rows: list, *, arch: str = "llama3.2-1b") -> dict:
+    from repro.configs.base import PruneConfig, get_smoke_config
+    from repro.data.synthetic import batches_for
+    from repro.launch import calibrate as launch_cal
+    from repro.models import model as M
+    from repro.serve.fleet import SparsityFleet
+
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.key(0))
+    calib = batches_for(cfg, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    with tempfile.TemporaryDirectory() as td:
+        bank_dir = td + "/bank"
+        launch_cal.calibrate_to_bank(bank_dir, cfg=cfg, pcfg=pcfg,
+                                     params=params, calib=calib, arch=arch,
+                                     smoke=True)
+        fleet = SparsityFleet.from_artifact(bank_dir, params, BUDGETS,
+                                            slots=SLOTS, capacity=CAPACITY,
+                                            spec=SPEC)
+
+    prompts = [np.arange(1, 5 + i, dtype=np.int32) % 97 + 1
+               for i in range(4)]
+
+    def timed(route: dict) -> tuple[list[list[int]], float]:
+        rids = [fleet.submit(p, GEN, **route) for p in prompts]
+        t0 = time.perf_counter()
+        res = fleet.run()
+        return [res[r] for r in rids], time.perf_counter() - t0
+
+    # warm every jit bucket (prefill, decode, draft_64, verify_64) OUTSIDE
+    # the timed region; two spec passes make sure late-compiled buckets
+    # (anything adaptive k visits) are hot too
+    for route in ({"budget": "0.0"}, {"budget": "0.5"}, {"spec": True},
+                  {"spec": True}):
+        timed(route)
+
+    # interleave the three modes inside each rep and take per-mode medians:
+    # paired sampling cancels slow machine periods that min-of-n timing
+    # hands to whichever mode got lucky
+    reps = 5
+    outs: dict[str, list[list[int]]] = {}
+    times: dict[str, list[float]] = {"dense": [], "draft": [], "spec": []}
+    for _ in range(reps):
+        for mode, route in (("dense", {"budget": "0.0"}),
+                            ("draft", {"budget": "0.5"}),
+                            ("spec", {"spec": True})):
+            o, dt = timed(route)
+            assert outs.setdefault(mode, o) == o, \
+                f"non-deterministic {mode} stream under timing"
+            times[mode].append(dt)
+
+    n_tok = sum(len(o) for o in outs["dense"])
+    dense_tok_s = n_tok / float(np.median(times["dense"]))
+    draft_tok_s = n_tok / float(np.median(times["draft"]))
+    spec_tok_s = n_tok / float(np.median(times["spec"]))
+    # speedups from per-rep PAIRED ratios (each rep's modes ran back to
+    # back under the same machine conditions), not ratios of medians
+    vs_dense = float(np.median([d / s for d, s
+                                in zip(times["dense"], times["spec"])]))
+    vs_draft = float(np.median([d / s for d, s
+                                in zip(times["draft"], times["spec"])]))
+    lossless = outs["spec"] == outs["dense"]
+
+    report = fleet.report()
+    spec_rep = report["spec"]
+    result = {
+        "arch": arch, "backend": jax.default_backend(),
+        "spec": SPEC, "budgets": list(fleet.engines),
+        "slots": SLOTS, "capacity": CAPACITY, "gen_tokens": GEN,
+        "requests": len(prompts), "tokens_per_mode": n_tok,
+        "spec_tok_s": spec_tok_s,
+        "dense_tok_s": dense_tok_s,
+        "draft_tok_s": draft_tok_s,
+        "speedup_vs_dense": vs_dense,
+        "speedup_vs_draft": vs_draft,
+        "lossless_vs_dense": lossless,
+        "accept_rate": spec_rep["accept_rate"],
+        "accepted_tokens_per_round": spec_rep["accepted_tokens_per_round"],
+        "rollbacks": spec_rep["rollbacks"],
+        "spec_rounds": spec_rep["rounds"],
+        "k_final": spec_rep["k"],
+    }
+    print(f"\n=== spec bench ({arch} smoke, {jax.default_backend()}) ===")
+    print(f"spec {spec_tok_s:8.1f} tok/s  dense {dense_tok_s:8.1f}  "
+          f"draft {draft_tok_s:8.1f}")
+    print(f"speedup vs dense {result['speedup_vs_dense']:.2f}x  "
+          f"vs draft {result['speedup_vs_draft']:.2f}x  "
+          f"lossless={lossless}")
+    print(f"accept_rate {spec_rep['accept_rate']:.3f}  "
+          f"accepted/round {spec_rep['accepted_tokens_per_round']:.2f}  "
+          f"rollbacks {spec_rep['rollbacks']}  k_final {spec_rep['k']}")
+    out_rows.append({"table": "spec", **result})
+    return result
+
+
+def run(out_rows: list) -> None:
+    spec_bench(out_rows)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = spec_bench(rows)
+    print("wrote", write_serve_json(res, name="BENCH_spec.json"))

@@ -24,7 +24,12 @@ trace under results/bench/obs_trace; the tensor-parallel bench must produce
 ``results/bench/BENCH_tp.json`` (from a forced-4-device child process) with
 the K-sharded engine token-identical to the replicated oracle on (1,4) and
 (2,2) meshes, a static per-decode-trace collective count, and the fused
-up/gate pair costing ONE deferred psum - and exits non-zero otherwise.
+up/gate pair costing ONE deferred psum; the spec bench must produce
+``results/bench/BENCH_spec.json`` with the self-speculative fleet path
+(sparse member drafts, dense member verifies in one batched pass) at
+>= 1.2x dense-only tok/s, the spec stream bit-identical to the dense
+member alone, and multi-token accepted runs - and exits non-zero
+otherwise.
 """
 from __future__ import annotations
 
@@ -140,14 +145,32 @@ def smoke() -> None:
         "down, 3 = deferral regressed)")
     assert psums22["attn"] == 4 and psums22["attn_kv"] >= 1, psums22
 
+    from benchmarks import bench_spec
+
+    sp = bench_spec.spec_bench(rows)
+    sp_path = table8_inference.write_serve_json(sp, name="BENCH_spec.json")
+    assert sp_path.exists(), sp_path
+    assert sp["lossless_vs_dense"], (
+        "speculative stream diverged from the dense member decoding alone "
+        "- greedy self-speculation must be lossless")
+    assert sp["speedup_vs_dense"] >= 1.2, (
+        f"speculative decode at {sp['speedup_vs_dense']:.2f}x dense-only "
+        "tok/s, below the 1.2x gate")
+    assert sp["accept_rate"] is not None and 0.0 <= sp["accept_rate"] <= 1.0
+    assert sp["accepted_tokens_per_round"] > 1.0, (
+        f"{sp['accepted_tokens_per_round']:.2f} accepted tokens/round: "
+        "speculation is not committing multi-token runs")
+
     print(f"smoke ok: wrote {path} (ratio {ratio:.4f}), {moe_path} "
           f"(ratio {moe_ratio:.4f}, {moe['expert_leaves']} expert banks "
           f"kernel-native), {fleet_path} "
           f"({len(fleet['budgets'])} budgets from one bank), {cal_path} "
           f"(scanned search {cal['scanned_vs_eager']:.2f}x eager, stats "
           f"parity ok), {ob_path} ({ob['overhead_pct']:.2f}% telemetry "
-          f"overhead) and {tp_path} "
-          f"({tp['devices']}-device K-sharded decode, parity ok)")
+          f"overhead), {tp_path} "
+          f"({tp['devices']}-device K-sharded decode, parity ok) and "
+          f"{sp_path} (spec {sp['speedup_vs_dense']:.2f}x dense tok/s, "
+          f"lossless)")
 
 
 def main() -> None:
@@ -158,17 +181,18 @@ def main() -> None:
         smoke()
         return
     from benchmarks import (bench_calibrate, bench_fleet, bench_obs,
-                            bench_tp, fig2_high_sparsity, oneshot_export,
-                            table1_unstructured, table2_semistructured,
-                            table4_local_metric, table5_mirror_ablation,
-                            table8_inference)
+                            bench_spec, bench_tp, fig2_high_sparsity,
+                            oneshot_export, table1_unstructured,
+                            table2_semistructured, table4_local_metric,
+                            table5_mirror_ablation, table8_inference)
 
     rows: list[dict] = []
     timings: list[tuple[str, float]] = []
     for mod in [table1_unstructured, table2_semistructured,
                 table4_local_metric, table5_mirror_ablation,
                 fig2_high_sparsity, table8_inference, bench_fleet,
-                bench_calibrate, bench_obs, bench_tp, oneshot_export]:
+                bench_calibrate, bench_obs, bench_tp, bench_spec,
+                oneshot_export]:
         name = mod.__name__.split(".")[-1]
         t0 = time.time()
         mod.run(rows)
@@ -199,6 +223,10 @@ def main() -> None:
     tp_rows = [r for r in rows if r.get("table") == "tp"]
     if tp_rows:
         table8_inference.write_serve_json(tp_rows[0], name="BENCH_tp.json")
+    spec_rows = [r for r in rows if r.get("table") == "spec"]
+    if spec_rows:
+        table8_inference.write_serve_json(spec_rows[0],
+                                          name="BENCH_spec.json")
 
     print("\nname,us_per_call,derived")
     for name, dt in timings:

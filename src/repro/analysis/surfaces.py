@@ -64,8 +64,17 @@ def _sparse_smoke(arch: str, *, idx_bits: int = 2):
 def serve_surfaces(arch: str = "llama3.2-1b", *,
                    mesh_shape: tuple | None = (2, 2), sparse: bool = True,
                    slots: int = 2, capacity: int = 32,
-                   prefill_bucket: int = 8) -> list[Surface]:
-    """decode / prefill_<bucket> / write_slot for one smoke engine.
+                   prefill_bucket: int = 8, spec_k: int = 4
+                   ) -> list[Surface]:
+    """decode / prefill_<bucket> / write_slot / verify_<k> for one smoke
+    engine.
+
+    ``verify_<k>`` is the speculative-decode verifier (teacher-forced
+    batched pass over k fed tokens, ``serve.spec``); it registers only for
+    archs whose layer kinds support spec mode (full-ring attention,
+    ``serve.spec.SPEC_SAFE_KINDS``, no sliding window) - the same gate the
+    decoder enforces, so the audited surface set matches what serving can
+    actually dispatch.
 
     mesh_shape (data, model) requires that many devices (force host
     devices via ``python -m repro.analysis --devices N ...`` or the
@@ -76,6 +85,7 @@ def serve_surfaces(arch: str = "llama3.2-1b", *,
     from repro.dist.axes import make_rules
     from repro.models import model as M
     from repro.serve.engine import ServeEngine
+    from repro.serve.spec import SPEC_SAFE_KINDS
     if sparse:
         cfg, params = _sparse_smoke(arch)
     else:
@@ -91,13 +101,20 @@ def serve_surfaces(arch: str = "llama3.2-1b", *,
     toks = jnp.zeros((slots,), jnp.int32)
     pos = jnp.zeros((slots,), jnp.int32)
     ptoks = jnp.zeros((1, prefill_bucket), jnp.int32)
-    return [
+    # NOTE: the decode surface stays at index 0 (zoo dry-runs and the
+    # memory planner key off it); new surfaces append at the end
+    out = [
         Surface("decode", eng._decode, (eng.params, toks, eng.caches, pos)),
         Surface(f"prefill_{prefill_bucket}", eng.fns.prefill(prefill_bucket),
                 (eng.params, ptoks)),
         Surface("write_slot", eng.fns.write_slot,
                 (eng.caches, eng.fns.blank_row(), jnp.int32(0))),
     ]
+    if set(cfg.layer_kinds) <= SPEC_SAFE_KINDS and not cfg.sliding_window:
+        vtoks = jnp.zeros((slots, spec_k), jnp.int32)
+        out.append(Surface(f"verify_{spec_k}", eng.fns.verify(spec_k),
+                           (eng.params, vtoks, eng.caches, pos)))
+    return out
 
 
 def search_surface(arch: str = "llama3.2-1b", *, chunk: int = 2,

@@ -16,7 +16,11 @@ mesh.  Sparse serving has two modes:
   budgets from the SAME bank concurrently behind one router
   (``serve.fleet.SparsityFleet``): tagged round-robin by default, weighted
   A/B traffic splitting with ``--ab`` (per-budget tok/s + token-agreement
-  vs the densest member in the printed report).
+  vs the densest member in the printed report);
+* ``--fleet ... --spec draft:2:4,verify:0.0,k:4`` - route the batch
+  through self-speculative decoding (``serve.spec``): the sparse member
+  drafts k tokens per round, the dense member verifies them in one
+  teacher-forced jitted pass; output bit-identical to the verifier alone.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --sparse --save-artifact results/bank/llama --gen 16
@@ -24,6 +28,9 @@ mesh.  Sparse serving has two modes:
       --sparse-artifact results/bank/llama --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --sparse-artifact results/bank/llama --fleet 0.0,0.5,2:4 --ab 1,1,2
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --sparse-artifact results/bank/llama --fleet 0.0,2:4 \
+      --spec draft:2:4,verify:0.0,k:4
 """
 from __future__ import annotations
 
@@ -119,13 +126,16 @@ def _serve_fleet(args, params) -> None:
     capacity = args.prompt_len + args.gen + 1
     fleet = SparsityFleet.from_artifact(
         args.sparse_artifact, params, budgets, slots=args.slots,
-        capacity=capacity, idx_bits=args.idx_bits)
+        capacity=capacity, idx_bits=args.idx_bits, spec=args.spec)
     cfg = fleet.cfg
     batch = batches_for(cfg, n=1, batch=args.batch, seq=args.prompt_len,
                         split="valid")[0]
     prompts = [np.asarray(batch["tokens"][i]) for i in range(args.batch)]
     names = list(fleet.engines)
-    if args.ab:
+    if args.spec:
+        rids = [fleet.submit(p, args.gen, spec=True) for p in prompts]
+        print(f"self-speculative decoding: {args.spec}")
+    elif args.ab:
         weights = [float(w) for w in args.ab.split(",")]
         if len(weights) != len(names):
             raise SystemExit(f"--ab needs {len(names)} weights (one per "
@@ -157,6 +167,16 @@ def _serve_fleet(args, params) -> None:
                  else "")
               + (f", decode p50/p95 {p50:.2f}/{p95:.2f} ms"
                  if p50 is not None else ""))
+    spec = rep["spec"]
+    if spec is not None:
+        print(f"  spec: {spec['draft']} drafts -> {spec['verify']} "
+              f"verifies, k={spec['k']}, "
+              f"accept rate {(spec['accept_rate'] or 0):.3f} "
+              f"(EMA {spec['accept_ema']:.3f}), "
+              f"{(spec['accepted_tokens_per_round'] or 0):.2f} tokens/round "
+              f"over {spec['rounds']} rounds, "
+              f"{spec['rollbacks']} rollbacks, "
+              f"{(spec['tok_s'] or 0):.1f} tok/s")
 
 
 def main(argv=None) -> None:
@@ -190,6 +210,11 @@ def main(argv=None) -> None:
                     help="with --fleet: comma-separated traffic weights "
                          "aligned with the --fleet budgets (default: "
                          "tagged round-robin)")
+    ap.add_argument("--spec", default=None,
+                    help="with --fleet: self-speculative decoding, e.g. "
+                         "draft:2:4,verify:0.0,k:4 (draft member proposes "
+                         "k tokens/round, verify member checks them in one "
+                         "teacher-forced pass; lossless vs the verifier)")
     ap.add_argument("--slots", type=int, default=None,
                     help="fleet decode-slot pool partitioned across "
                          "budgets (default: 2 per budget)")
@@ -226,6 +251,9 @@ def _serve(args) -> None:
     assert not cfg.is_encoder_decoder or args.gen > 0
     params = M.init_params(cfg, jax.random.key(0))
 
+    if args.spec and not args.fleet:
+        raise SystemExit("--spec rides the fleet router: pass --fleet with "
+                         "the draft and verify budgets")
     if args.fleet:
         if not args.sparse_artifact:
             raise SystemExit("--fleet serves from a saved mask bank: "

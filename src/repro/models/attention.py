@@ -444,6 +444,64 @@ def attn_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
     return y, cache
 
 
+def attn_apply_verify(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
+                      num_heads: int, num_kv: int, head_dim: int,
+                      rope_theta: float = 1e4, use_rope: bool = True,
+                      attn_softcap: float = 0.0, scale: float | None = None,
+                      seq_sharded: bool = False) -> tuple[jax.Array, PyTree]:
+    """Teacher-forced S-token decode in ONE pass (speculative verify).
+
+    x: (B, S, d) - S fed tokens per row; t: (B,) per-row start positions,
+    so row b's token i sits at position t[b] + i.  All S ring rows are
+    written FIRST, then every query attends over the full ring with the
+    per-query mask kpos <= t + i: later chunk rows hold positions > t + i,
+    so in-chunk causality falls out of the same position mask sequential
+    decode uses - no separate triangular mask, and the output column i is
+    bit-identical to what ``attn_apply_decode`` would produce after feeding
+    tokens 0..i one at a time.  The caller must guarantee max(t) + S <=
+    capacity (no ring wrap, ``serve.spec`` clamps k accordingly); a wrap
+    would evict a row some earlier in-chunk query still needs.  Windowed
+    (ring-capped) caches are excluded for the same reason.
+    """
+    B, S, _ = x.shape
+    C = cache["k"].shape[1]
+    q = cm.dense(p["wq"], x).reshape(B, S, num_heads, head_dim)
+    k = cm.dense(p["wk"], x).reshape(B, S, num_kv, head_dim)
+    v = cm.dense(p["wv"], x).reshape(B, S, num_kv, head_dim)
+    q, k = _qk_normed(p, q, k)
+    pos = jnp.asarray(t, jnp.int32)[:, None] + jnp.arange(S)      # (B, S)
+    if use_rope:
+        q = cm.rope(q, pos, theta=rope_theta)
+        k = cm.rope(k, pos, theta=rope_theta)
+    rows = jnp.arange(B)[:, None]
+    slot = ring_slot(pos, C)
+    cache = {
+        "k": cache["k"].at[rows, slot].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[rows, slot].set(v.astype(cache["v"].dtype)),
+    }
+    K, G = num_kv, num_heads // num_kv
+    scale = head_dim ** -0.5 if scale is None else scale
+    qg = q.reshape(B, S, K, G, head_dim)
+    seq_ax = "kv_seq" if seq_sharded else None
+    ck = constrain(cache["k"], "batch", seq_ax, "kv_heads", None)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg, ck,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = cm.softcap(s, attn_softcap)
+    kpos = ring_positions(pos[:, -1], C)                          # (B, C)
+    ok = kpos[:, None, :] <= pos[:, :, None]                      # (B, S, C)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    s = constrain(s, "batch", "kv_heads", None, None, seq_ax)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    pr = jnp.exp(s - m)
+    l = jnp.sum(pr, axis=-1, keepdims=True)
+    cv = constrain(cache["v"], "batch", seq_ax, "kv_heads", None)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", (pr / l).astype(cache["v"].dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, S, num_heads * head_dim).astype(x.dtype)
+    return cm.dense(p["wo"], o), cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -560,4 +618,58 @@ def mla_apply_decode(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
         kv_lora, H, v_dim)
     o = jnp.einsum("bhr,rhd->bhd", o_c, w_uv)
     y = cm.dense(p["wo"], o.reshape(B, 1, H * v_dim).astype(jnp.bfloat16))
+    return y, cache
+
+
+def mla_apply_verify(p: PyTree, x: jax.Array, cache: PyTree, t: jax.Array, *,
+                     num_heads: int, kv_lora: int, nope_dim: int = 128,
+                     rope_dim: int = 64, v_dim: int = 128,
+                     rope_theta: float = 1e4, seq_sharded: bool = False,
+                     ) -> tuple[jax.Array, PyTree]:
+    """Teacher-forced S-token absorbed-matmul decode (speculative verify).
+
+    Same write-then-attend discipline as ``attn_apply_verify``: all S
+    c-space rows land in the ring first, each query i masks kpos <= t + i.
+    Caller guarantees max(t) + S <= capacity (no ring wrap)."""
+    B, S, _ = x.shape
+    H = num_heads
+    C = cache["ckv"].shape[1]
+    pos = jnp.asarray(t, jnp.int32)[:, None] + jnp.arange(S)      # (B, S)
+    q = cm.dense(p["wq"], x).reshape(B, S, H, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = cm.rope(q_rope, pos, theta=rope_theta)               # (B,S,H,r)
+    ckr = cm.dense(p["w_dkv"], x)
+    c_new = cm.rmsnorm(p["kv_norm"], ckr[..., :kv_lora])          # (B,S,kv)
+    k_rope_new = cm.rope(ckr[..., kv_lora:][:, :, None, :], pos,
+                         theta=rope_theta)[:, :, 0]               # (B,S,r)
+    rows = jnp.arange(B)[:, None]
+    slot = ring_slot(pos, C)
+    cache = {
+        "ckv": cache["ckv"].at[rows, slot].set(
+            c_new.astype(cache["ckv"].dtype)),
+        "krope": cache["krope"].at[rows, slot].set(
+            k_rope_new.astype(cache["krope"].dtype)),
+    }
+    w_uk = cm.kernel_dense(p["w_uk"]).astype(jnp.float32).reshape(
+        kv_lora, H, nope_dim)
+    q_c = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), w_uk)
+    seq_ax = "kv_seq" if seq_sharded else None
+    ckv = constrain(cache["ckv"], "batch", seq_ax, None)
+    krope = constrain(cache["krope"], "batch", seq_ax, None)
+    s = jnp.einsum("bshr,bcr->bshc", q_c.astype(jnp.bfloat16), ckv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshr,bcr->bshc", q_rope.astype(jnp.bfloat16), krope,
+                       preferred_element_type=jnp.float32)
+    s = s * (nope_dim + rope_dim) ** -0.5
+    kpos = ring_positions(pos[:, -1], C)                          # (B, C)
+    ok = kpos[:, None, :] <= pos[:, :, None]                      # (B, S, C)
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
+    s = constrain(s, "batch", None, "heads", seq_ax)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bshc,bcr->bshr", p_attn.astype(jnp.bfloat16), ckv,
+                     preferred_element_type=jnp.float32)
+    w_uv = cm.kernel_dense(p["w_uv"]).astype(jnp.float32).reshape(
+        kv_lora, H, v_dim)
+    o = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
+    y = cm.dense(p["wo"], o.reshape(B, S, H * v_dim).astype(jnp.bfloat16))
     return y, cache

@@ -139,6 +139,22 @@ def _tblock_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
     return x + f, cache
 
 
+def _tblock_apply_verify(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                         seq_sharded: bool = False):
+    kw = _attn_kwargs(cfg, local=False)
+    assert not kw.pop("window"), "verify excludes windowed (ring-capped) kinds"
+    a, cache = attn.attn_apply_verify(
+        p["attn"], _norm(cfg, p["ln1"], x), cache, t,
+        seq_sharded=seq_sharded, **kw)
+    if cfg.sandwich_norm:
+        a = _norm(cfg, p["post_ln1"], a)
+    x = x + a
+    f, _ = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    if cfg.sandwich_norm:
+        f = _norm(cfg, p["post_ln2"], f)
+    return x + f, cache
+
+
 # ---------------------------------------------------------------------------
 # MLA blocks (deepseek)
 # ---------------------------------------------------------------------------
@@ -184,6 +200,16 @@ def _mla_cache(cfg: ModelConfig, batch: int, capacity: int):
 def _mla_apply_decode(cfg: ModelConfig, p: PyTree, x, cache, t, *,
                       seq_sharded: bool = False):
     a, cache = attn.mla_apply_decode(
+        p["attn"], _norm(cfg, p["ln1"], x), cache, t,
+        seq_sharded=seq_sharded, **_mla_kwargs(cfg))
+    x = x + a
+    f, _ = _ffn_apply(cfg, p, _norm(cfg, p["ln2"], x))
+    return x + f, cache
+
+
+def _mla_apply_verify(cfg: ModelConfig, p: PyTree, x, cache, t, *,
+                      seq_sharded: bool = False):
+    a, cache = attn.mla_apply_verify(
         p["attn"], _norm(cfg, p["ln1"], x), cache, t,
         seq_sharded=seq_sharded, **_mla_kwargs(cfg))
     x = x + a
@@ -506,3 +532,21 @@ def block_apply_decode(kind: str, cfg: ModelConfig, p: PyTree, x: jax.Array,
     if kind == "dec":
         return _dec_apply_decode(cfg, p, x, cache, t, seq_sharded=seq_sharded)
     raise ValueError(kind)
+
+
+def block_apply_verify(kind: str, cfg: ModelConfig, p: PyTree, x: jax.Array,
+                       cache: PyTree, t: jax.Array,
+                       shared: PyTree | None = None,
+                       seq_sharded: bool = False):
+    """Teacher-forced S-token decode (speculative verify): one parallel
+    pass over S fed tokens per row, write-then-attend against the slot's
+    ring (see ``attention.attn_apply_verify``).  Only full-ring attention
+    kinds support it - windowed rings can wrap mid-chunk and recurrent
+    state cannot roll back (``serve.spec.SPEC_SAFE_KINDS``)."""
+    if kind in ("attn", "moe"):
+        return _tblock_apply_verify(cfg, p, x, cache, t,
+                                    seq_sharded=seq_sharded)
+    if kind in ("mla_dense", "mla_moe"):
+        return _mla_apply_verify(cfg, p, x, cache, t, seq_sharded=seq_sharded)
+    raise ValueError(f"kind {kind!r} has no parallel verify path "
+                     "(spec decode gates on SPEC_SAFE_KINDS)")

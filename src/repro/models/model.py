@@ -337,3 +337,40 @@ def decode_step(cfg: ModelConfig, params: PyTree, token: jax.Array,
     x = blk._norm(cfg, params["final_norm"], x)
     logits = _unembed(cfg, params, x)
     return logits[:, 0], new_caches
+
+
+def verify_step(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+                caches: list, t: jax.Array, *, seq_sharded: bool = False):
+    """Teacher-forced S-token decode in ONE batched pass (spec verify).
+
+    tokens: (B, S) int32 - S fed tokens per row; t: (B,) per-row start
+    positions.  Column i's logits are the model's continuation of the fed
+    prefix ``tokens[:, :i + 1]``, bit-identical to feeding the same tokens
+    through ``decode_step`` one at a time (write-then-attend ring updates,
+    per-query position masks; see ``blocks.block_apply_verify``), but the
+    layer op graph executes once for all S positions instead of S times -
+    the verifier of ``serve.spec`` prices k draft tokens at roughly one
+    decode step.  Caller guarantees max(t) + S <= cache capacity (no ring
+    wrap).  Returns (logits (B, S, V), new_caches)."""
+    assert not cfg.is_encoder_decoder, "spec verify is decoder-only"
+    x = cm.embed_lookup(params["embed"], tokens)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    shared = params.get("shared")
+    new_caches = []
+    for (pattern, repeats), sp, cache in zip(make_stages(cfg),
+                                             params["stages"], caches):
+        def body(h, xs):
+            layer_p, layer_c = xs
+            nc = {}
+            for j, kind in enumerate(pattern):
+                h, c = blk.block_apply_verify(
+                    kind, cfg, layer_p[str(j)], h, layer_c[str(j)], t,
+                    shared=shared, seq_sharded=seq_sharded)
+                nc[str(j)] = c
+            return h, nc
+
+        x, nc = jax.lax.scan(body, x, (sp, cache))
+        new_caches.append(nc)
+    x = blk._norm(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x), new_caches

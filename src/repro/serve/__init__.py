@@ -8,7 +8,13 @@
   ONE mask bank and served behind a single router with tagged and A/B
   traffic splitting (per-budget tok/s + token-agreement vs the densest
   member).
+* ``spec`` - :class:`SpecDecoder`, self-speculative decoding across two
+  fleet members: the sparse member drafts k tokens per round, the dense
+  member verifies them in one teacher-forced jitted pass; output streams
+  are bit-identical to the verifier decoding alone.
 """
 from repro.serve.engine import EngineFns, ServeEngine  # noqa: F401
 from repro.serve.fleet import (  # noqa: F401
     Budget, SparsityFleet, parse_budget, token_agreement)
+from repro.serve.spec import (  # noqa: F401
+    SpecConfig, SpecDecoder, accept_commit, parse_spec)

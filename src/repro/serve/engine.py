@@ -35,6 +35,7 @@ points and therefore compilations.  Request validation happens at
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any
@@ -91,6 +92,8 @@ class EngineFns:
         # is compiled in, not GSPMD-guessed.  None = single-device/GSPMD.
         self.rules = rules
         self.prefill_fns: dict[int, Any] = {}   # bucket -> jitted prefill
+        self.verify_fns: dict[int, Any] = {}    # k -> jitted verify pass
+        self.draft_fns: dict[int, Any] = {}     # k -> jitted draft loop
         self._blank_row = None  # lazily-built slot-reset template
         # slot admission: one jitted dynamic-index row write (slot index is
         # an operand, not a constant -> one compile covers every slot)
@@ -137,13 +140,75 @@ class EngineFns:
             self.prefill_fns[bucket] = fn
         return fn
 
+    def verify(self, k: int) -> Any:
+        """Jitted teacher-forced verify over k fed tokens in ONE batched
+        prefill-style pass (bucketed on k like prefill is on length).
+
+        ``(params, toks (B, k), caches, pos (B,)) -> (argmax (B, k) int32,
+        caches)``.  Column i's argmax is the model's greedy continuation of
+        the fed prefix ``toks[:, :i + 1]`` - ``model.verify_step`` runs the
+        same arithmetic as k sequential fused decode steps (write-then-
+        attend ring updates, per-query position masks) but executes the
+        layer op graph ONCE for all k positions, so verifying k draft
+        tokens costs about one decode step, not k.  Cache rows for all k
+        fed positions are written; rows past a rejection point sit AHEAD of
+        the slot's committed position vector and stay invisible to
+        attention (``ring_positions`` masks kpos > t) until the committed
+        stream reaches and overwrites them - rollback is a host-side
+        position bookkeeping change, never cache surgery.
+        """
+        fn = self.verify_fns.get(k)
+        if fn is None:
+            obs.inc("serve.jit_entries", surface="verify", bucket=k)
+            cfg = self.cfg
+
+            def _verify(p, toks, caches, t):
+                logits, caches = M.verify_step(cfg, p, toks, caches, t)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+            fn = jax.jit(self._under_rules(_verify))
+            self.verify_fns[k] = fn
+        return fn
+
+    def draft(self, k: int) -> Any:
+        """Jitted k-token autoregressive draft loop (bucketed on k).
+
+        ``(params, seed (B,), caches, pos (B,)) -> (drafts (B, k) int32,
+        caches)``.  Feeds ``seed`` (the slot's pending token), then its own
+        greedy argmax k - 1 more times - ONE dispatch proposes k tokens,
+        against k dispatches for the plain per-token decode loop.  The scan
+        body is the same ``model.decode_step`` as the fused decode, so a
+        draft engine running this loop produces the identical stream its
+        own sequential decode would.
+        """
+        fn = self.draft_fns.get(k)
+        if fn is None:
+            obs.inc("serve.jit_entries", surface="draft", bucket=k)
+            cfg = self.cfg
+
+            def _draft(p, seed, caches, t):
+                def col(carry, _):
+                    tok, caches, pos = carry
+                    logits, caches = M.decode_step(cfg, p, tok, caches, pos)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    return (nxt, caches, pos + 1), nxt
+                (_, caches, _), out = jax.lax.scan(
+                    col, (seed, caches, t), None, length=k)
+                return jnp.transpose(out), caches
+
+            fn = jax.jit(self._under_rules(_draft))
+            self.draft_fns[k] = fn
+        return fn
+
     def jit_cache_sizes(self) -> dict[str, int]:
         """Compiled-trace count per jit surface (shared across every engine
         on this EngineFns): the live recompile signal - one entry per
         distinct params *structure* that hit the surface, so a fleet whose
         members alias one structure shows 1, not N."""
         fns = {"decode": self.decode, "write_slot": self.write_slot,
-               **{f"prefill_{b}": f for b, f in self.prefill_fns.items()}}
+               **{f"prefill_{b}": f for b, f in self.prefill_fns.items()},
+               **{f"verify_{k}": f for k, f in self.verify_fns.items()},
+               **{f"draft_{k}": f for k, f in self.draft_fns.items()}}
         out = {}
         for surface, fn in fns.items():
             size = getattr(fn, "_cache_size", None)
@@ -210,7 +275,9 @@ class ServeEngine:
         self.caches = caches
         self.pos = np.zeros((slots,), np.int32)       # next position per slot
         self.active: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
+        # admission is FIFO off the left end; deque keeps it O(1) now that
+        # spec mode interleaves members (and admits) every round
+        self.queue: collections.deque[Request] = collections.deque()
         self._done_unslotted: list[Request] = []  # finished without a slot
         self._next_rid = 0
         self._pad_prefill = set(cfg.layer_kinds) <= _PAD_SAFE_KINDS
@@ -309,9 +376,15 @@ class ServeEngine:
     def _admit(self) -> None:
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.active[s] = req
                 self._prefill_slot(s, req)
+
+    def free_slot(self, s: int) -> None:
+        """Release slot s for reuse (requests retired outside ``_step``,
+        e.g. by the speculative decoder, go through here)."""
+        self.active[s] = None
+        self.pos[s] = 0
 
     def _prefill_bucket(self, n: int) -> int:
         if not self._pad_prefill:
@@ -405,8 +478,7 @@ class ServeEngine:
             if hit_eos or len(req.out) >= req.max_tokens:
                 req.done = True
                 finished.append(req)
-                self.active[s] = None   # freed: _admit reuses it next step
-                self.pos[s] = 0
+                self.free_slot(s)       # freed: _admit reuses it next step
         if finished and obs.enabled():
             obs.inc("serve.requests_retired", len(finished),
                     **self.obs_labels)

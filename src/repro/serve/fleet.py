@@ -26,9 +26,14 @@ Routing: ``submit(prompt, budget=...)`` pins a request to one member;
 ``submit(prompt, ab=...)`` splits traffic across members by weight
 (deterministic weighted fair scheduling - no RNG, reproducible splits) and
 mirrors each off-reference request onto the *densest* member so the router
-accumulates per-budget token-agreement alongside tokens/s.  ``report()``
-returns the live quality/latency table; ``agreement_matrix`` serves a
-prompt set through every member for the full NxN comparison.
+accumulates per-budget token-agreement alongside tokens/s;
+``submit(prompt, spec=True)`` routes through the self-speculative decoder
+(``serve.spec``): the sparse draft member proposes k tokens per round and
+the dense member verifies them in one teacher-forced jitted pass, with the
+two members interleaved inside one fleet step instead of ``run()``'s
+sequential per-member drain - output bit-identical to the verifier alone.
+``report()`` returns the live quality/latency table; ``agreement_matrix``
+serves a prompt set through every member for the full NxN comparison.
 
 The slot pool is partitioned across members at construction: ``slots``
 total decode slots spread round-robin (every member gets at least one).
@@ -44,6 +49,7 @@ import numpy as np
 
 from repro import obs
 from repro.serve.engine import EngineFns, ServeEngine
+from repro.serve.spec import SpecConfig, SpecDecoder, parse_spec
 
 PyTree = Any
 
@@ -120,7 +126,8 @@ class SparsityFleet:
     def __init__(self, bank, params0: PyTree, budgets: Iterable, *,
                  slots: int | None = None, capacity: int = 512,
                  decode_mode: str = "fused", rules: Any = None,
-                 eos_id: int | None = None, idx_bits: int = 2):
+                 eos_id: int | None = None, idx_bits: int = 2,
+                 spec: Any = None):
         from repro.sparse import apply as apply_mod
         self.bank = bank
         self.cfg = bank.cfg
@@ -161,10 +168,22 @@ class SparsityFleet:
         self._shadows: dict[int, int] = {}  # frid -> reference engine rid
         self._next_rid = 0
         self._ab_served: dict[str, int] = {n: 0 for n in self._order}
+        # per-member counters; "shadow" keeps A/B mirror traffic out of the
+        # headline tokens/seconds (the skew fix: shadow tokens used to fold
+        # into the reference's tok_s while its request count ignored them),
+        # "spec_phase_tokens" counts foreign tokens spec rounds advanced
         self._stats = {n: {"requests": 0, "tokens": 0, "seconds": 0.0,
-                           "mirrored_picks": 0,
-                           "agree_sum": 0.0, "agree_n": 0}
+                           "mirrored_picks": 0, "spec_phase_tokens": 0,
+                           "agree_sum": 0.0, "agree_n": 0,
+                           "shadow": {"requests": 0, "tokens": 0,
+                                      "seconds": 0.0}}
                        for n in self._order}
+        # speculative decoding (serve.spec): built lazily on the first
+        # spec-routed submit so fleets that never use it pay nothing
+        self.spec_config = parse_spec(spec) if spec is not None else None
+        self._spec: SpecDecoder | None = None
+        self._spec_names: tuple[str, str] | None = None
+        self._spec_routes: dict[int, int] = {}  # frid -> spec decoder rid
 
     @classmethod
     def from_artifact(cls, bank_dir, params0: PyTree, budgets: Iterable,
@@ -209,8 +228,8 @@ class SparsityFleet:
     # -- routing -------------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_tokens: int = 16, *,
-               budget=None, ab=None) -> int:
-        """Route one request; exactly one of ``budget=`` / ``ab=``.
+               budget=None, ab=None, spec=None) -> int:
+        """Route one request; exactly one of ``budget=``/``ab=``/``spec=``.
 
         budget: a member (any ``parse_budget`` spelling) - pinned routing.
         ab: True (uniform split) or a {budget: weight} mapping - the fleet
@@ -218,9 +237,24 @@ class SparsityFleet:
         the smallest served/weight ratio) and, when the pick is not the
         densest member, mirrors the request onto the reference engine so
         ``report()`` accumulates token-agreement for the pick.
+        spec: True routes through the fleet's speculative decoder (the
+        sparse draft member proposes, the dense member verifies - output
+        bit-identical to the verifier decoding alone, see ``serve.spec``);
+        pass a :class:`SpecConfig` or a ``draft:2:4,verify:0.0,k:4`` string
+        to configure the decoder on first use instead of the fleet's
+        ``spec=`` construction argument.
         """
-        if (budget is None) == (ab is None):
-            raise ValueError("pass exactly one of budget= or ab=")
+        if (budget is not None) + (ab is not None) + (spec is not None) != 1:
+            raise ValueError("pass exactly one of budget=, ab= or spec=")
+        if spec is not None:
+            sd = self._spec_decoder(None if spec is True else spec)
+            frid = self._next_rid
+            self._next_rid += 1
+            self._spec_routes[frid] = sd.submit(prompt, max_tokens)
+            if obs.enabled():
+                d, v = self._spec_names
+                obs.inc("fleet.requests", budget=f"spec:{d}>{v}")
+            return frid
         if budget is not None:
             name = parse_budget(budget).name
             if name not in self.engines:
@@ -267,14 +301,76 @@ class SparsityFleet:
         self._ab_served[name] += 1
         return name
 
+    def _spec_decoder(self, override=None) -> SpecDecoder:
+        """The fleet's (lazily-built) speculative decoder; one per fleet -
+        the (draft, verifier) pair is fixed at first use."""
+        if override is not None:
+            sc = parse_spec(override)
+            if self._spec is not None and sc != self.spec_config:
+                raise ValueError(
+                    f"fleet speculative decoder already configured as "
+                    f"{self.spec_config}; cannot reconfigure to {sc}")
+            self.spec_config = sc
+        if self._spec is None:
+            sc = self.spec_config or SpecConfig()
+            dname = parse_budget(sc.draft).name
+            vname = (parse_budget(sc.verify).name if sc.verify is not None
+                     else self.reference)
+            for nm in (dname, vname):
+                if nm not in self.engines:
+                    raise KeyError(
+                        f"spec member {nm!r} not in fleet {self._order}")
+            if dname == vname:
+                raise ValueError(
+                    f"spec draft and verifier are both {dname!r}; pick a "
+                    "sparser draft than the verifier")
+            # seed adaptive k from the live A/B agreement of the drafting
+            # member vs the reference, when any has accumulated
+            st = self._stats[dname]
+            init = (st["agree_sum"] / st["agree_n"] if st["agree_n"]
+                    and vname == self.reference else None)
+            self._spec = SpecDecoder(
+                self.engines[dname], self.engines[vname], k=sc.k,
+                k_min=sc.k_min, k_max=sc.k_max, adaptive=sc.adaptive,
+                ema=sc.ema, ema_hi=sc.ema_hi, ema_lo=sc.ema_lo,
+                init_accept=init, labels={"draft": dname, "verify": vname})
+            self._spec_names = (dname, vname)
+        return self._spec
+
     def run(self) -> dict[int, list[int]]:
         """Drive every member to completion; returns fleet rid -> tokens.
 
-        Per-member wall time and token counts accumulate into ``report()``;
-        A/B shadow outputs are folded into the router's agreement stats and
-        dropped (the caller sees only the member its request routed to).
+        Spec-routed traffic runs FIRST: the speculative decoder interleaves
+        the draft and verifier members round by round inside one fleet
+        step (instead of this loop's sequential per-member drain), and any
+        foreign requests it finished along the way merge into the member
+        results below.  Per-member wall time and token counts accumulate
+        into ``report()``; A/B shadow outputs are folded into the router's
+        agreement stats and dropped (the caller sees only the member its
+        request routed to), and their tokens/seconds accumulate under the
+        member's ``shadow`` key so headline tok_s stays shadow-free.
         """
         per_engine: dict[str, dict[int, list[int]]] = {}
+        merged: dict[int, list[int]] = {}
+        if self._spec is not None and self._spec.pending:
+            dname, vname = self._spec_names
+            sp = obs.span("fleet.run_spec", draft=dname, verify=vname)
+            with sp:
+                t0 = time.perf_counter()
+                spec_res, spec_foreign = self._spec.run()
+                dt = time.perf_counter() - t0
+            self._spec.stats["seconds"] += dt
+            for kind, nm in (("draft", dname), ("verify", vname)):
+                fin = spec_foreign[kind]
+                if fin:
+                    per_engine.setdefault(nm, {}).update(fin)
+                    self._stats[nm]["spec_phase_tokens"] += sum(
+                        len(v) for v in fin.values())
+            for frid, srid in list(self._spec_routes.items()):
+                if srid in spec_res:
+                    merged[frid] = spec_res[srid]
+                    del self._spec_routes[frid]
+        shadow_rids = set(self._shadows.values())
         for name, eng in self.engines.items():
             if not eng.pending:
                 continue
@@ -283,14 +379,25 @@ class SparsityFleet:
                 t0 = time.perf_counter()
                 res = eng.run()
                 dt = time.perf_counter() - t0
-            per_engine[name] = res
+            per_engine.setdefault(name, {}).update(res)
             st = self._stats[name]
-            st["seconds"] += dt
-            st["tokens"] += sum(len(v) for v in res.values())
+            total = sum(len(v) for v in res.values())
+            sh_toks = (sum(len(v) for rid, v in res.items()
+                           if rid in shadow_rids)
+                       if name == self.reference else 0)
+            # shadow work rode the same batched steps as real traffic, so
+            # its share of the member's wall time is prorated by tokens
+            sh_dt = dt * sh_toks / total if total else 0.0
+            st["seconds"] += dt - sh_dt
+            st["tokens"] += total - sh_toks
+            if sh_toks:
+                st["shadow"]["tokens"] += sh_toks
+                st["shadow"]["seconds"] += sh_dt
+                st["shadow"]["requests"] += sum(
+                    1 for rid in res if rid in shadow_rids)
             if obs.enabled():
                 obs.set_gauge("fleet.queue_depth", len(eng.queue),
                               budget=name)
-        merged: dict[int, list[int]] = {}
         for frid, (name, erid) in list(self._routes.items()):
             res = per_engine.get(name, {})
             if erid not in res:
@@ -339,7 +446,11 @@ class SparsityFleet:
                     "requests": st["requests"],
                     "mirrored_picks": st["mirrored_picks"],
                     "seconds": st["seconds"],
+                    "spec_phase_tokens": st["spec_phase_tokens"],
                 },
+                # A/B mirror traffic, tracked apart so the headline tok_s
+                # and per-request numbers above stay shadow-free
+                "shadow": dict(st["shadow"]),
                 # populated when the flight recorder is enabled (None
                 # otherwise): bucket-estimated percentiles over every
                 # decode step this member served
@@ -349,7 +460,9 @@ class SparsityFleet:
                                                 budget=name),
                 **self.reports[name],
             }
-        return {"reference": self.reference, "budgets": budgets}
+        return {"reference": self.reference, "budgets": budgets,
+                "spec": (self._spec.summary() if self._spec is not None
+                         else None)}
 
     def agreement_matrix(self, prompts: list, max_tokens: int = 8
                          ) -> tuple[dict, dict]:

@@ -125,6 +125,36 @@ def test_fleet_ab_split_is_deterministic_and_scores_agreement(bank_setup):
         fleet.submit(prompt, 3, budget="0.5", ab=True)
 
 
+def test_fleet_report_keeps_shadow_traffic_out_of_headline(bank_setup):
+    """A/B mirror (shadow) requests ride the reference member's batched
+    steps but are NOT the reference's own traffic: they must accumulate
+    under the member's ``shadow`` key and never inflate the headline
+    tokens/tok_s (the old skew: shadow tokens padded the reference's token
+    count while its request count ignored them, overstating tok_s)."""
+    params, d = bank_setup
+    fleet = SparsityFleet.from_artifact(d, params, BUDGETS, slots=3,
+                                        capacity=32)
+    prompt = np.array([5, 6, 7, 8])
+    # all picks go to 0.5 -> every request mirrors onto the 0.0 reference
+    rids = [fleet.submit(prompt, 4, ab={"0.5": 1.0}) for _ in range(3)]
+    res = fleet.run()
+    assert all(len(res[r]) == 4 for r in rids)
+    rep = fleet.report()["budgets"]
+    ref = rep["0.0"]
+    # the reference served ONLY shadows: headline stays empty...
+    assert ref["requests"] == 0 and ref["tokens"] == 0
+    assert ref["tok_s"] is None
+    assert ref["cumulative"]["seconds"] == 0.0
+    # ...and the mirror work is fully visible under the shadow key
+    assert ref["shadow"]["requests"] == 3
+    assert ref["shadow"]["tokens"] == 12
+    assert ref["shadow"]["seconds"] > 0.0
+    # the picked member's headline counts its own traffic, shadow-free
+    assert rep["0.5"]["requests"] == 3 and rep["0.5"]["tokens"] == 12
+    assert rep["0.5"]["shadow"] == {"requests": 0, "tokens": 0,
+                                    "seconds": 0.0}
+
+
 def test_fleet_eos_frees_slot_and_reuses_it(bank_setup):
     """eos emitted on the FIRST decode step must free the member's slot and
     the queued request admitted into it must decode with no state leak -

@@ -159,6 +159,86 @@ def test_shared_engine_fns_match_per_engine_build():
         ServeEngine(cfg, params, slots=1, capacity=64, fns=fns)  # mismatch
 
 
+def test_queue_is_fifo_deque():
+    """Admission pops the OLDEST queued request (O(1) off a deque): with
+    one slot, three requests complete in submission order."""
+    import collections
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=1, capacity=32)
+    assert isinstance(eng.queue, collections.deque)
+    prompts = [np.array([5, 6, 7]), np.array([9, 10]), np.array([1, 2, 3])]
+    rids = [eng.submit(p, 2) for p in prompts]
+    assert [r.rid for r in eng.queue] == rids  # submission order kept
+    eng._admit()
+    assert eng.active[0].rid == rids[0]        # oldest admitted first
+    assert [r.rid for r in eng.queue] == rids[1:]
+    out = eng.run()
+    assert all(len(out[r]) == 2 for r in rids)
+
+
+def test_engine_fns_verify_matches_sequential_decode():
+    """EngineFns.verify(k) - the speculative verifier's ONE batched
+    teacher-forced pass - must be bit-identical (argmax AND cache rows) to
+    feeding the same k tokens through the fused decode one at a time, with
+    every row at its own position."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    fns = EngineFns(cfg, 32)
+    B, k = 3, 4
+    caches = M.init_caches(cfg, B, 32)
+    rng = np.random.default_rng(7)
+    pos = np.array([0, 0, 0], np.int32)
+    tok = rng.integers(1, cfg.vocab_size, size=(B,)).astype(np.int32)
+    for _ in range(5):  # build unequal per-row history
+        step = (pos < np.array([5, 2, 4])).astype(np.int32)
+        logits, caches = fns.decode(params, tok, caches, pos)
+        nxt = np.asarray(logits.argmax(-1)).astype(np.int32)
+        tok = np.where(step, nxt, tok)
+        pos = pos + step  # rows that "idle" rewrite the same ring row
+    fed = rng.integers(1, cfg.vocab_size, size=(B, k)).astype(np.int32)
+
+    seq_caches, p = caches, pos.copy()
+    want = []
+    for i in range(k):
+        logits, seq_caches = fns.decode(params, fed[:, i], seq_caches, p)
+        want.append(np.asarray(logits.argmax(-1)))
+        p += 1
+    want = np.stack(want, 1)
+
+    got, ver_caches = fns.verify(k)(params, fed, caches, pos)
+    assert np.array_equal(np.asarray(got), want)
+    for a, b in zip(jax.tree.leaves(seq_caches), jax.tree.leaves(ver_caches)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert set(fns.verify_fns) == {k}
+    assert "verify_4" in fns.jit_cache_sizes()
+
+
+def test_engine_fns_draft_matches_own_sequential_decode():
+    """EngineFns.draft(k) - the proposer's one-dispatch autoregressive
+    loop - must reproduce the engine's own per-token greedy stream."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = M.init_params(cfg, jax.random.key(0))
+    fns = EngineFns(cfg, 32)
+    B, k = 2, 5
+    caches = M.init_caches(cfg, B, 32)
+    seed = np.array([5, 9], np.int32)
+    pos = np.zeros((B,), np.int32)
+
+    seq_caches, p = caches, pos.copy()
+    tok, want = seed.copy(), []
+    for _ in range(k):
+        logits, seq_caches = fns.decode(params, tok, seq_caches, p)
+        tok = np.asarray(logits.argmax(-1)).astype(np.int32)
+        want.append(tok)
+        p += 1
+    want = np.stack(want, 1)
+
+    got, _ = fns.draft(k)(params, seed, caches, pos)
+    assert np.array_equal(np.asarray(got), want)
+    assert set(fns.draft_fns) == {k}
+
+
 def test_engine_batching_invariance():
     cfg = get_smoke_config("llama3.2-1b")
     params = M.init_params(cfg, jax.random.key(0))

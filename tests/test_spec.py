@@ -1,0 +1,296 @@
+"""Self-speculative decoding: sparse member drafts, dense member verifies.
+
+The correctness anchor for every test here is LOSSLESSNESS: greedy
+speculative decoding must emit streams bit-identical to the verifier
+decoding alone, whatever the draft proposes (`serve.spec`).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig, get_smoke_config
+from repro.core import calibrate
+from repro.core import masks as masks_mod
+from repro.core import metrics as metrics_mod
+from repro.core.prunable import prunable_map
+from repro.data.synthetic import batches_for
+from repro.models import model as M
+from repro.serve.engine import EngineFns, ServeEngine
+from repro.serve.fleet import SparsityFleet
+from repro.serve.spec import SpecDecoder, accept_commit, parse_spec
+from repro.sparse.bank import MaskBank
+
+CFG = get_smoke_config("llama3.2-1b")
+PROMPTS = [np.array([5, 6, 7, 8]), np.array([9, 10, 11]), np.array([1, 2])]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def draft_params(params):
+    """Magnitude-masked 0.5 variant: high token agreement, not identity."""
+    pr = prunable_map(params)
+    scores = metrics_mod.metric_tree(
+        "magnitude", params, jax.tree.map(lambda _: None, pr), pr)
+    masks = masks_mod.unstructured_masks(scores, sparsity=0.5)
+    return masks_mod.apply_masks(params, masks)
+
+
+def _dense_oracle(params, prompts, gen, *, capacity=32, eos_id=None):
+    eng = ServeEngine(CFG, params, slots=len(prompts), capacity=capacity,
+                      eos_id=eos_id)
+    rids = [eng.submit(p, gen) for p in prompts]
+    res = eng.run()
+    return [res[r] for r in rids]
+
+
+def _spec_pair(params, draft_params, *, slots=3, capacity=32, eos_id=None,
+               **kw):
+    fns = EngineFns(CFG, capacity)
+    v = ServeEngine(CFG, params, slots=slots, capacity=capacity, fns=fns,
+                    eos_id=eos_id)
+    d = ServeEngine(CFG, draft_params, slots=slots, capacity=capacity,
+                    fns=fns, eos_id=eos_id)
+    return SpecDecoder(d, v, **kw)
+
+
+def test_accept_commit_edges():
+    # all k accepted: commit the k drafts, NO correction token (the last
+    # draft was itself verified; its continuation is next round's business)
+    assert accept_commit([3, 4, 5], [3, 4, 5]) == (3, [3, 4, 5])
+    # rejected at position 0: exactly the verifier's token commits - the
+    # round degrades to plain (lossless) decode, never below
+    assert accept_commit([3, 4, 5], [9, 4, 5]) == (0, [9])
+    # mid rollback: agreeing prefix + the correction at first disagreement
+    assert accept_commit([3, 4, 5], [3, 4, 7]) == (2, [3, 4, 7])
+    assert accept_commit([3], [3]) == (1, [3])
+    assert accept_commit([3], [8]) == (0, [8])
+
+
+def test_spec_is_lossless_with_identical_params(params):
+    """Draft == verifier params: every draft accepted, zero rollbacks, and
+    the stream equals the verifier decoding alone."""
+    want = _dense_oracle(params, PROMPTS, 8)
+    sd = _spec_pair(params, params, k=3, k_max=6, init_accept=0.9)
+    rids = [sd.submit(p, 8) for p in PROMPTS]
+    res, foreign = sd.run()
+    assert [res[r] for r in rids] == want
+    assert foreign == {"draft": {}, "verify": {}}
+    assert sd.stats["rollbacks"] == 0
+    assert sd.stats["accepted_draft_tokens"] == sd.stats["tokens"]
+    assert sd.k > 3  # adaptive k grew on sustained full acceptance
+    s = sd.summary()
+    assert s["accept_rate"] == 1.0 and s["tokens"] == sum(map(len, want))
+
+
+def test_spec_is_lossless_with_divergent_draft(params):
+    """A draft whose proposals DISAGREE still yields the verifier's exact
+    stream - rollback safety is where losslessness is earned.  (Two random
+    inits both echo their input token on smoke weights, so disagreement is
+    forced structurally: boosting one tied-embedding row pins the draft's
+    unembed argmax to that token.)"""
+    boosted = np.asarray(params["embed"]["table"]).copy()
+    boosted[7] *= 100.0
+    bad_draft = dict(params, embed={"table": jax.numpy.asarray(boosted)})
+    want = _dense_oracle(params, PROMPTS, 8)
+    assert not any(7 in w for w in want)  # the pin genuinely disagrees
+    sd = _spec_pair(params, bad_draft, k=4, init_accept=0.9)
+    rids = [sd.submit(p, 8) for p in PROMPTS]
+    res, _ = sd.run()
+    assert [res[r] for r in rids] == want
+    assert sd.stats["rollbacks"] > 0
+    assert sd.summary()["accept_rate"] < 1.0
+
+
+def test_spec_masked_draft_lossless_and_accepting(params, draft_params):
+    """The production pairing: a 0.5 masked-dense draft agrees on most
+    tokens (accept rate strictly between the degenerate extremes is not
+    guaranteed on smoke weights, but losslessness is)."""
+    want = _dense_oracle(params, PROMPTS, 10)
+    sd = _spec_pair(params, draft_params, k=4, k_max=8)
+    rids = [sd.submit(p, 10) for p in PROMPTS]
+    res, _ = sd.run()
+    assert [res[r] for r in rids] == want
+    assert 0.0 <= sd.summary()["accept_rate"] <= 1.0
+
+
+def test_spec_eos_truncates_inside_accepted_run(params):
+    """eos emitted mid-round (inside a multi-token accepted run) must end
+    the stream AT the eos - no post-eos tokens leak out of the same round's
+    accepted suffix - free both members' slots, and leave no state for the
+    next request admitted into them."""
+    base = _dense_oracle(params, [PROMPTS[0]], 8)[0]
+    eos = base[2]  # guaranteed to land inside the first k=4 accepted run
+    want = base[:base.index(eos) + 1]
+    sd = _spec_pair(params, params, slots=1, eos_id=eos, k=4,
+                    init_accept=0.9)
+    r1 = sd.submit(PROMPTS[0], 8)
+    r2 = sd.submit(PROMPTS[1], 4)  # queued behind r1 on the 1-slot pair
+    res, _ = sd.run()
+    assert res[r1] == want
+    assert res[r1][-1] == eos and eos not in res[r1][:-1]
+    # the freed slots leaked nothing into the queued request
+    fresh = _dense_oracle(params, [PROMPTS[1]], 4, eos_id=eos)[0]
+    assert res[r2] == fresh
+    assert all(r is None for r in sd.draft_eng.active)
+    assert all(r is None for r in sd.verify_eng.active)
+
+
+def test_spec_max_tokens_not_a_multiple_of_k(params):
+    """A request budget that ends mid-round truncates the accepted run at
+    exactly max_tokens (k=4 rounds, 6-token budget)."""
+    want = _dense_oracle(params, PROMPTS, 6)
+    sd = _spec_pair(params, params, k=4, k_min=4, k_max=4, adaptive=False)
+    rids = [sd.submit(p, 6) for p in PROMPTS]
+    res, _ = sd.run()
+    assert [res[r] for r in rids] == want
+    assert all(len(res[r]) == 6 for r in rids)
+
+
+def test_spec_zero_and_one_token_requests(params):
+    sd = _spec_pair(params, params, k=4)
+    r0 = sd.submit(PROMPTS[0], 0)
+    r1 = sd.submit(PROMPTS[0], 1)
+    res, _ = sd.run()
+    assert res[r0] == []
+    assert res[r1] == _dense_oracle(params, [PROMPTS[0]], 1)[0]
+
+
+def test_spec_k_eff_clamps_at_capacity_and_stays_lossless(params):
+    """Near ring capacity the fed width shrinks to the headroom (a
+    speculative write past capacity would WRAP the ring and evict live
+    rows); at headroom 1 rounds degrade to plain decode, which matches the
+    dense engine even once the ring genuinely wraps."""
+    cap, gen = 16, 18  # positions run past capacity: wraps like plain decode
+    want = _dense_oracle(params, [PROMPTS[0]], gen, capacity=cap)
+    sd = _spec_pair(params, params, slots=1, capacity=cap, k=8,
+                    k_min=8, k_max=8, adaptive=False, init_accept=0.9)
+    rid = sd.submit(PROMPTS[0], gen)
+    res, _ = sd.run()
+    assert res[rid] == want[0]
+    # clamped rounds fed fewer than k positions each
+    assert sd.stats["draft_positions"] < 8 * sd.stats["pair_rounds"]
+
+
+def test_spec_constructor_validation(params):
+    eng_a = ServeEngine(CFG, params, slots=1, capacity=32)
+    eng_b = ServeEngine(CFG, params, slots=1, capacity=32)
+    with pytest.raises(ValueError, match="distinct"):
+        SpecDecoder(eng_a, eng_a)
+    with pytest.raises(ValueError, match="capacity"):
+        SpecDecoder(eng_a, ServeEngine(CFG, params, slots=1, capacity=64))
+    with pytest.raises(ValueError, match="eos_id"):
+        SpecDecoder(eng_a, ServeEngine(CFG, params, slots=1, capacity=32,
+                                       eos_id=7))
+    with pytest.raises(ValueError, match="k_min"):
+        SpecDecoder(eng_a, eng_b, k=9, k_max=8)
+    # windowed rings evict live rows on speculative writes: rejected
+    wcfg = get_smoke_config("gemma2-2b")
+    wparams = M.init_params(wcfg, jax.random.key(0))
+    wa = ServeEngine(wcfg, wparams, slots=1, capacity=32)
+    wb = ServeEngine(wcfg, wparams, slots=1, capacity=32)
+    with pytest.raises(ValueError, match="sliding|window|kinds"):
+        SpecDecoder(wa, wb)
+    # recurrent state cannot roll back: rejected
+    xcfg = get_smoke_config("xlstm-125m")
+    xparams = M.init_params(xcfg, jax.random.key(0))
+    xa = ServeEngine(xcfg, xparams, slots=1, capacity=32)
+    xb = ServeEngine(xcfg, xparams, slots=1, capacity=32)
+    with pytest.raises(ValueError, match="kinds"):
+        SpecDecoder(xa, xb)
+
+
+def test_parse_spec_strings():
+    sc = parse_spec("draft:2:4,verify:0.0,k:4")
+    assert (sc.draft, sc.verify, sc.k) == ("2:4", "0.0", 4)
+    sc = parse_spec("draft:0.5,k:3,k_max:6,adaptive:false,ema:0.5")
+    assert sc.verify is None and sc.k_max == 6
+    assert sc.adaptive is False and sc.ema == 0.5
+    assert parse_spec(sc) is sc
+    with pytest.raises(ValueError, match="key:value"):
+        parse_spec("draft=0.5")
+    with pytest.raises(ValueError, match="unknown spec key"):
+        parse_spec("depth:4")
+
+
+# -- fleet routing ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bank_setup(tmp_path_factory, params):
+    calib = batches_for(CFG, n=2, batch=2, seq=16, split="calib")
+    pcfg = PruneConfig(local_metric="wanda", mode="nm", steps=2)
+    stats = calibrate.collect_stats(CFG, params, calib)
+    state, _ = calibrate.run_search(CFG, pcfg, params, calib, stats)
+    d = tmp_path_factory.mktemp("specfleet") / "bank"
+    MaskBank.save(d, arch="llama3.2-1b", smoke=True, state=state,
+                  stats=stats, pcfg=pcfg)
+    return d
+
+
+def test_fleet_spec_routing_is_lossless_and_reported(bank_setup, params):
+    """fleet.submit(spec=True) drives the (draft, verifier) pair through
+    interleaved speculative rounds; the caller's stream is bit-identical to
+    pinning the same prompt on the dense reference, and report() grows a
+    spec section."""
+    budgets = ["0.0", "0.5"]
+    oracle = SparsityFleet.from_artifact(bank_setup, params, budgets,
+                                         slots=4, capacity=32)
+    rids = [oracle.submit(p, 8, budget="0.0") for p in PROMPTS]
+    res = oracle.run()
+    want = [res[r] for r in rids]
+
+    fleet = SparsityFleet.from_artifact(bank_setup, params, budgets,
+                                        slots=4, capacity=32,
+                                        spec="draft:0.5,k:3")
+    srids = [fleet.submit(p, 8, spec=True) for p in PROMPTS]
+    out = fleet.run()
+    assert [out[r] for r in srids] == want
+    rep = fleet.report()
+    assert rep["spec"]["requests"] == len(PROMPTS)
+    assert rep["spec"]["tokens"] == sum(map(len, want))
+    assert rep["spec"]["tok_s"] is None or rep["spec"]["tok_s"] > 0
+    assert 0.0 <= rep["spec"]["accept_rate"] <= 1.0
+    assert (rep["spec"]["draft"], rep["spec"]["verify"]) == ("0.5", "0.0")
+
+
+def test_fleet_spec_interleaves_foreign_member_traffic(bank_setup, params):
+    """Pinned member requests sharing slots with spec rounds advance one
+    token per round off column 0 of the same batched dispatch - their
+    streams must equal a pinned-only fleet's."""
+    budgets = ["0.0", "0.5"]
+    oracle = SparsityFleet.from_artifact(bank_setup, params, budgets,
+                                         slots=4, capacity=32)
+    rp = oracle.submit(PROMPTS[2], 6, budget="0.5")
+    want_pin = oracle.run()[rp]
+
+    fleet = SparsityFleet.from_artifact(bank_setup, params, budgets,
+                                        slots=4, capacity=32,
+                                        spec="draft:0.5,k:3")
+    pin = fleet.submit(PROMPTS[2], 6, budget="0.5")   # foreign on the draft
+    srids = [fleet.submit(p, 8, spec=True) for p in PROMPTS[:2]]
+    out = fleet.run()
+    assert out[pin] == want_pin
+    assert all(len(out[r]) == 8 for r in srids)
+    # foreign tokens the spec rounds advanced are accounted per member
+    cum = fleet.report()["budgets"]["0.5"]["cumulative"]
+    assert cum["spec_phase_tokens"] == len(want_pin)
+
+
+def test_fleet_spec_bad_member_and_reconfigure(bank_setup, params):
+    fleet = SparsityFleet.from_artifact(bank_setup, params, ["0.0", "0.5"],
+                                        slots=2, capacity=32)
+    with pytest.raises(KeyError, match="spec member"):
+        fleet.submit(PROMPTS[0], 4, spec="draft:2:4")
+    with pytest.raises(ValueError, match="both"):
+        fleet.submit(PROMPTS[0], 4, spec="draft:0.0")  # draft == reference
+    fleet.submit(PROMPTS[0], 4, spec="draft:0.5,k:2")
+    with pytest.raises(ValueError, match="reconfigure"):
+        fleet.submit(PROMPTS[0], 4, spec="draft:0.5,k:3")
+    with pytest.raises(ValueError, match="exactly one"):
+        fleet.submit(PROMPTS[0], 4)
+    fleet.run()
